@@ -1,0 +1,24 @@
+"""Shared benchmark utilities."""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import numpy as np
+import jax
+
+
+def timeit(fn, *args, warmup=1, iters=5):
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,81 @@
+"""Fig. 12 analogue: FHE primitive + workload throughput across parameter
+sets (the paper compares FHEmem configs vs SHARP/CraterLake on deep and
+shallow workloads; on CPU we measure our implementation's primitive times
+and derive workload-level numbers via the §IV-F pipeline estimator)."""
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core.params import CkksParams
+from repro.core.context import CkksContext
+from repro.core.encoder import CkksEncoder
+from repro.core.encryptor import CkksEncryptor
+from repro.core.ciphertext import Plaintext
+from repro.core import ops, pipeline as pl, trace as tr
+
+
+def bench_param_set(tag, params):
+    ctx = CkksContext(params)
+    enc = CkksEncoder(ctx)
+    encr = CkksEncryptor(ctx)
+    sk = encr.keygen()
+    rk = encr.relin_keygen(sk)
+    gk = encr.rotation_keygen(sk, [1])
+    rng = np.random.default_rng(0)
+    s = ctx.n // 2
+    scale = 2.0 ** params.log_scale
+    L = params.n_levels
+    v = rng.normal(size=s) * 0.3
+    ct1 = encr.encrypt_sk(Plaintext(enc.encode(v, scale, L), L, scale), sk)
+    ct2 = encr.encrypt_sk(Plaintext(enc.encode(v, scale, L), L, scale), sk)
+
+    row(f"fig12_{tag}_hadd", 1e6 * timeit(
+        lambda: ops.hadd(ctx, ct1, ct2)), f"N=2^{params.log_n},L={L}")
+    row(f"fig12_{tag}_pmul", 1e6 * timeit(
+        lambda: ops.pmul(ctx, ct1, Plaintext(ct2.data[0], L, scale))))
+    row(f"fig12_{tag}_hmul_kso", 1e6 * timeit(
+        lambda: ops.hmul(ctx, ct1, ct2, rk)), "incl. relin+rescale")
+    row(f"fig12_{tag}_rotate", 1e6 * timeit(
+        lambda: ops.rotate(ctx, ct1, 1, gk[ctx.rotation_element(1)])))
+
+
+def bench_pipeline_estimates():
+    """Workload-level (HELR iteration / bootstrapping CtS) per-input latency
+    from the load-save pipeline model at paper scale."""
+    from repro.core.trace import trace_program
+
+    def helr_iter(x, w, consts=None):
+        sc = x * w
+        for k in (1, 2, 4, 8, 16, 32, 64, 128):
+            sc = sc + sc.rotate(k)
+        a = sc * consts["c1"]
+        b = sc * sc
+        c = b * sc
+        g = (a + c * consts["c3"]) * x
+        return w + g
+
+    t = trace_program(helr_iter, 2, const_names=("c1", "c3"))
+    params = CkksParams(log_n=16, log_scale=28, n_levels=23, dnum=4,
+                        first_mod_bits=31, scale_mod_bits=28,
+                        special_mod_bits=31)
+    tr.infer_levels(t, start_level=20)
+    mem = pl.MemoryModel(n_partitions=32, partition_bytes=512 * 2 ** 20,
+                         load_bw=64e9, modmul_throughput=8e12,
+                         transfer_bw=256e9)
+    sched = pl.generate_load_save_pipeline(t, params, mem)
+    lat = sched.bottleneck_latency(32)
+    row("fig12_helr_iter_pipeline", lat * 1e6,
+        f"paper-scale N=2^16 L=23 dnum=4, {len(sched.stages)} stages")
+
+
+def main():
+    bench_param_set("shallow", CkksParams(
+        log_n=11, log_scale=26, n_levels=6, dnum=1, first_mod_bits=30,
+        scale_mod_bits=26, special_mod_bits=30))
+    bench_param_set("deep", CkksParams(
+        log_n=12, log_scale=28, n_levels=12, dnum=4, first_mod_bits=31,
+        scale_mod_bits=28, special_mod_bits=31))
+    bench_pipeline_estimates()
+
+
+if __name__ == "__main__":
+    main()

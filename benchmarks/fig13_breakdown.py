@@ -1,0 +1,52 @@
+"""Fig. 13 analogue: latency breakdown of HMul+KSO into its primitive
+phases (NTT/iNTT, BConv, elementwise modmul, evk MACs) — measured on CPU
+and compared against the analytic op-count model of core/trace.py."""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core.params import CkksParams
+from repro.core.context import CkksContext
+from repro.core import modarith as ma, rns
+from repro.core.trace import FheOp, keyswitch_cost, op_cost
+
+
+def main():
+    params = CkksParams(log_n=12, log_scale=28, n_levels=12, dnum=4,
+                        first_mod_bits=31, scale_mod_bits=28,
+                        special_mod_bits=31)
+    ctx = CkksContext(params)
+    L = params.n_levels
+    idx_q = ctx.q_idx(L)
+    idx_p = ctx.p_idx()
+    rng = np.random.default_rng(0)
+    qs = np.asarray(ctx.q_all)[: L + 1]
+    a = jnp.asarray(rng.integers(0, 2 ** 30, size=(L + 1, ctx.n),
+                                 dtype=np.uint64) % qs[:, None])
+
+    t_ntt = timeit(lambda: ctx.ntt(a, idx_q))
+    t_intt = timeit(lambda: ctx.intt(a, idx_q))
+    t_mul = timeit(lambda: ma.mulmod(a, a, ctx.q_all[: L + 1][:, None]))
+    tabs = ctx.bconv_tables(idx_q[: params.alpha], idx_p)
+    t_bconv = timeit(lambda: rns.bconv(a[: params.alpha], tabs))
+
+    row("fig13_ntt_full_basis", t_ntt * 1e6, f"N=2^{params.log_n},L={L+1}")
+    row("fig13_intt_full_basis", t_intt * 1e6)
+    row("fig13_modmul_full_basis", t_mul * 1e6)
+    row("fig13_bconv_digit", t_bconv * 1e6,
+        f"alpha={params.alpha}->k={params.n_special}")
+
+    # analytic phase split of one KSO at top level
+    c = keyswitch_cost(params, L - 1)
+    per_ntt = t_ntt / (L + 1)
+    per_mul_row = t_mul / (L + 1)
+    est_ntt = c.ntts * per_ntt
+    est_mul = c.modmuls * per_mul_row
+    row("fig13_kso_est_ntt_phase", est_ntt * 1e6,
+        f"{c.ntts} NTT passes ({100*est_ntt/(est_ntt+est_mul):.0f}%)")
+    row("fig13_kso_est_mul_phase", est_mul * 1e6,
+        f"{c.modmuls} modmul rows ({100*est_mul/(est_ntt+est_mul):.0f}%)")
+
+
+if __name__ == "__main__":
+    main()

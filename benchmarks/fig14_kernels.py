@@ -1,0 +1,80 @@
+"""Fig. 14 analogue: processing-technology comparison. The paper compares
+FHEmem's near-mat PIM against SIMDRAM/DRISA; here we compare the compute
+paths available to this framework on the same NTT/modmul work:
+
+  * pure-jnp reference (ref.py oracle)                 <- "conventional"
+  * jit'd iterative NTT (library path)                 <- production CPU
+  * Pallas four-step kernel, interpret mode            <- TPU-target logic
+  * modmul reduction strategies (generic/Barrett/Montgomery/Solinas)
+
+Interpret-mode timings are NOT TPU performance (the kernel body runs as
+Python/jnp per block); the comparison is about op-count structure — the
+derived column reports per-coefficient work.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import modarith as ma
+from repro.core import ntt as nttm
+from repro.core.params import find_2nth_root, find_ntt_primes
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def main():
+    log_n = 12
+    n = 1 << log_n
+    mod = find_ntt_primes(30, log_n, 1)[0]
+    q = mod.value
+    psi = find_2nth_root(q, 2 * n)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, q, size=n, dtype=np.uint64)
+    tabs = nttm.NttTables([mod], log_n)
+    aj = jnp.asarray(a[None])
+
+    t = timeit(lambda: nttm.ntt(aj, tabs))
+    row("fig14_ntt_iterative_jit", t * 1e6, f"N=2^{log_n}")
+    kern = kops.NttKernel(q, psi, log_n, log_n // 2)
+    a1 = jnp.asarray(a)
+    t = timeit(lambda: kern(a1, interpret=True), warmup=1, iters=3)
+    row("fig14_ntt_fourstep_pallas_interpret", t * 1e6,
+        "TPU-target kernel; interpret mode")
+    ft = kref.FourStepTables(q, psi, log_n, log_n // 2)
+    t = timeit(lambda: kref.four_step_ntt_ref(a1, ft), warmup=1, iters=3)
+    row("fig14_ntt_fourstep_ref", t * 1e6)
+
+    # modmul reduction strategies (paper §IV-B: Montgomery-friendly moduli)
+    b = rng.integers(0, q, size=(4, n), dtype=np.uint64)
+    bj = jnp.asarray(b)
+    qv = jnp.uint64(q)
+    row("fig14_modmul_generic", 1e6 * timeit(
+        lambda: ma.mulmod(bj, bj, qv)), "u64 remainder")
+    mu = jnp.uint64(ma.barrett_mu(q))
+    row("fig14_modmul_barrett", 1e6 * timeit(
+        lambda: ma.mulmod_barrett(bj, bj, qv, mu)))
+    qi = jnp.uint64(ma.mont_qinv_neg(q))
+    row("fig14_modmul_montgomery", 1e6 * timeit(
+        lambda: ma.mont_mul(bj, bj, qv, qi)))
+    bb, ss = mod.solinas
+    row("fig14_modmul_solinas_shiftadd", 1e6 * timeit(
+        lambda: ma.mulmod_solinas(bj, bj, qv, bb, ss)),
+        f"q=2^{bb}-2^{ss}+1 hamming={mod.hamming_weight}")
+
+    # bconv kernel schedules
+    src = [m.value for m in find_ntt_primes(28, 10, 6)]
+    dst = [m.value for m in find_ntt_primes(30, 10, 4)]
+    v = np.stack([rng.integers(0, p, size=1024, dtype=np.uint64)
+                  for p in src])
+    w = rng.integers(0, min(dst), size=(6, 4), dtype=np.uint64)
+    vj, wj = jnp.asarray(v), jnp.asarray(w)
+    row("fig14_bconv_kernel_eager", 1e6 * timeit(
+        lambda: kops.bconv(vj, wj, dst, lazy=False, interpret=True),
+        warmup=1, iters=3))
+    row("fig14_bconv_kernel_lazy", 1e6 * timeit(
+        lambda: kops.bconv(vj, wj, dst, lazy=True, interpret=True),
+        warmup=1, iters=3), "deferred modular folds")
+
+
+if __name__ == "__main__":
+    main()

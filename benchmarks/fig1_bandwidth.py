@@ -1,0 +1,37 @@
+"""Fig. 1 reproduction: off-chip bandwidth required vs on-chip NTT
+throughput for a key-switching operation, from the analytic op/footprint
+model (core/trace.py) — the analysis that motivates PIM in the paper.
+
+Scenario (paper §I, L=30-ish deep params): an accelerator with K NTT units
+(each one butterfly/cycle @ 1GHz) processing HMul+KSO back to back; data
+loaded per op under three locality scenarios: evk only / evk+1 operand /
+evk+2 operands.
+"""
+from benchmarks.common import row
+from repro.core.params import paper_params_bootstrap
+from repro.core.trace import (FheOp, ct_bytes, evk_bytes, keyswitch_cost,
+                              op_cost)
+
+
+def main():
+    params = paper_params_bootstrap()
+    level = params.n_levels
+    n = params.n
+    hmul = op_cost(params, FheOp(0, "hmul", (0, 1), level=level - 1))
+    # NTT butterflies for the op: ntts * (N/2 log2 N)
+    import math
+    butterflies = hmul.ntts * (n // 2) * math.log2(n)
+    for k_ntt in (1024, 2048, 16384, 65536):
+        t_compute = butterflies / (k_ntt * 1e9)        # seconds per HMul+KSO
+        for scen, bytes_needed in (
+                ("evk_only", evk_bytes(params)),
+                ("evk+1op", evk_bytes(params) + ct_bytes(params, level - 1)),
+                ("evk+2op", evk_bytes(params) + 2 * ct_bytes(params, level - 1)),
+        ):
+            bw = bytes_needed / t_compute
+            row(f"fig1_bw_req_{k_ntt}ntt_{scen}", t_compute * 1e6,
+                f"{bw/1e12:.2f}TB/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md tables from benchmarks/results/*.jsonl."""
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "results")
+
+
+def load(name):
+    path = os.path.join(RESULTS, name)
+    recs = {}
+    if not os.path.exists(path):
+        return []
+    for line in open(path):
+        r = json.loads(line)
+        arch = r["arch"].replace("_", "-")
+        if arch == "llama-3-2-vision-90b":   # pre-fix runs used mangled id
+            arch = "llama-3.2-vision-90b"
+        r["arch"] = arch
+        recs[(arch, r["shape"], r.get("mesh", ""))] = r
+    return list(recs.values())   # dedup: last write wins
+
+
+def dryrun_table():
+    recs = load("dryrun.jsonl")
+    print("\n### Dry-run (lower + compile) — all cells x both meshes\n")
+    print("| arch | shape | mesh | status | compile_s | HLO flops/dev | "
+          "coll MiB/dev | temp GiB/dev | arg GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                  f"{r['compile_s']:.1f} | {r['flops_per_device']:.2e} | "
+                  f"{r['collective_total']/2**20:.0f} | "
+                  f"{(r['temp_bytes'] or 0)/2**30:.2f} | "
+                  f"{(r['argument_bytes'] or 0)/2**30:.2f} |")
+        else:
+            why = r.get("reason", r.get("error", ""))[:60]
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{r['status']} | — | — | — | — | {why} |")
+    ok = sum(r["status"] == "ok" for r in recs)
+    sk = sum(r["status"] == "skipped" for r in recs)
+    er = sum(r["status"] == "error" for r in recs)
+    print(f"\nTotals: {ok} compiled ok, {sk} documented skips, {er} errors.")
+
+
+def roofline_table():
+    recs = load("roofline.jsonl")
+    print("\n### Roofline (single-pod 16x16, 256 chips; v5e terms)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant |"
+          " MODEL_FLOPS | useful/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+                  f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+                  f"{r['dominant'][:-2]} | {r['model_flops']:.2e} | "
+                  f"{min(r['useful_flops_ratio'],9.99):.3f} | "
+                  f"{min(r['roofline_fraction'],9.99):.3f} |")
+        elif r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — |"
+                  f" — | — |")
+        else:
+            print(f"| {r['arch']} | {r['shape']} | ERROR "
+                  f"{r.get('error','')[:40]} | | | | | | |")
+
+
+def pick_hillclimb():
+    recs = [r for r in load("roofline.jsonl") if r["status"] == "ok"]
+    by_rf = sorted((r for r in recs if r["shape"] != "long_500k"),
+                   key=lambda r: r["roofline_fraction"])
+    coll = sorted(recs, key=lambda r: -(r["collective_s"] /
+                                        max(r["compute_s"] + r["memory_s"],
+                                            1e-9)))
+    print("\nworst roofline fraction:",
+          [(r["arch"], r["shape"], round(r["roofline_fraction"], 4))
+           for r in by_rf[:3]])
+    print("most collective-bound:",
+          [(r["arch"], r["shape"],
+            round(r["collective_s"] / max(r["compute_s"], 1e-9), 1))
+           for r in coll[:3]])
+
+
+if __name__ == "__main__":
+    what = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if what in ("all", "dryrun"):
+        dryrun_table()
+    if what in ("all", "roofline"):
+        roofline_table()
+    if what in ("all", "pick"):
+        pick_hillclimb()

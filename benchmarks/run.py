@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig12]
+"""
+import argparse
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+MODULES = ["fig1_bandwidth", "fig12_workloads", "fig13_breakdown",
+           "fig14_kernels", "fig15_ablations"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    import importlib
+    for m in MODULES:
+        if args.only and args.only not in m:
+            continue
+        mod = importlib.import_module(f"benchmarks.{m}")
+        print(f"# --- {m} ---")
+        mod.main()
+
+
+if __name__ == '__main__':
+    main()

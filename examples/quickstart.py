@@ -1,0 +1,67 @@
+"""Quickstart: CKKS basics with the repro library.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.params import CkksParams
+from repro.core.context import CkksContext
+from repro.core.encoder import CkksEncoder
+from repro.core.encryptor import CkksEncryptor
+from repro.core.ciphertext import Plaintext
+from repro.core import ops
+
+
+def main():
+    # small, CPU-friendly (NOT a secure parameter set — demo sizing)
+    params = CkksParams(log_n=10, log_scale=26, n_levels=4, dnum=2,
+                        first_mod_bits=30, scale_mod_bits=26,
+                        special_mod_bits=30)
+    ctx = CkksContext(params)
+    enc = CkksEncoder(ctx)
+    encr = CkksEncryptor(ctx)
+    sk = encr.keygen()
+    rk = encr.relin_keygen(sk)
+    gk = encr.rotation_keygen(sk, [1])
+
+    scale = 2.0 ** 26
+    L = params.n_levels
+    slots = ctx.n // 2
+    rng = np.random.default_rng(0)
+    v1 = rng.normal(size=slots) * 0.5
+    v2 = rng.normal(size=slots) * 0.5
+
+    def encrypt(v):
+        return encr.encrypt_sk(
+            Plaintext(enc.encode(v, scale, L), L, scale), sk)
+
+    def decrypt(ct):
+        return enc.decode(encr.decrypt(ct, sk).data, ct.scale, ct.level).real
+
+    ct1, ct2 = encrypt(v1), encrypt(v2)
+    print(f"ring degree N=2^{params.log_n}, {slots} packed slots, "
+          f"L={L} levels, dnum={params.dnum}")
+    print(f"moduli (bits): {[m.value.bit_length() for m in params.moduli]}")
+    print(f"Montgomery-friendly (Solinas) moduli: "
+          f"{sum(m.is_solinas for m in params.moduli)}/{len(params.moduli)}")
+
+    add = ops.hadd(ctx, ct1, ct2)
+    print(f"HAdd error:   {np.abs(decrypt(add) - (v1 + v2)).max():.2e}")
+
+    mul = ops.hmul(ctx, ct1, ct2, rk)
+    print(f"HMul error:   {np.abs(decrypt(mul) - v1 * v2).max():.2e} "
+          f"(level {ct1.level} -> {mul.level})")
+
+    rot = ops.rotate(ctx, ct1, 1, gk[ctx.rotation_element(1)])
+    print(f"Rotate error: {np.abs(decrypt(rot) - np.roll(v1, -1)).max():.2e}")
+
+    sq = ops.hsquare(ctx, mul, rk)
+    print(f"HSquare error (depth 2): "
+          f"{np.abs(decrypt(sq) - (v1 * v2) ** 2).max():.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""FHEmem core: full-RNS CKKS in JAX.
+
+The paper's contribution (near-mat PIM processing for FHE) is adapted to
+TPU per DESIGN.md §2. This package is the *algorithmic* substrate: exact
+RNS-CKKS with the paper's algorithm-level optimizations (Montgomery-friendly
+moduli, three-phase/four-step NTT, interleaved automorphism layout,
+load-save pipeline mapping).
+
+64-bit integer mode is required for exact modular arithmetic with u64
+intermediates; we enable it at import. Model code (repro.models) is
+dtype-explicit, so x64 never changes LM numerics.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.params import CkksParams, find_ntt_primes  # noqa: E402,F401

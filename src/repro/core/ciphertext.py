@@ -1,0 +1,55 @@
+"""Ciphertext / plaintext / key containers.
+
+Representation: all polynomials live in the NTT (evaluation) domain in
+bit-reversed order (see core/ntt.py), as uint64 RNS limbs:
+
+    Ciphertext.data : (2, level+1, N)   [0]=b, [1]=a;  Dec = b + a*s
+    KeySwitchKey.data : (dnum, 2, n_q + n_p, N)
+
+`scale` is the CKKS scaling factor (float bookkeeping, exact enough for
+depth < 2^20); `level` counts remaining rescalings (limbs = level+1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Ciphertext:
+    data: jnp.ndarray           # (2, level+1, N) uint64, NTT domain
+    level: int
+    scale: float
+
+    @property
+    def n_limbs(self) -> int:
+        return self.level + 1
+
+    def copy(self) -> "Ciphertext":
+        return Ciphertext(self.data, self.level, self.scale)
+
+
+@dataclasses.dataclass
+class Plaintext:
+    data: jnp.ndarray           # (level+1, N) uint64, NTT domain
+    level: int
+    scale: float
+
+
+@dataclasses.dataclass
+class SecretKey:
+    s_ntt: jnp.ndarray          # (n_q + n_p, N) NTT domain under all moduli
+    s_coeff_ternary: Optional[jnp.ndarray] = None  # (N,) int8 (tests only)
+
+
+@dataclasses.dataclass
+class PublicKey:
+    data: jnp.ndarray           # (2, n_q, N) at full Q basis
+
+
+@dataclasses.dataclass
+class KeySwitchKey:
+    """Generalized (dnum-digit) key-switching key: enc of g_d * s_src."""
+    data: jnp.ndarray           # (dnum, 2, n_q + n_p, N)

@@ -1,0 +1,176 @@
+"""Modular arithmetic for RNS-CKKS, vectorized over (limb, coeff) arrays.
+
+All data arrays are uint64 holding values reduced mod a <2^31 modulus
+("word32" mode — the TPU-native adaptation of FHEmem's 64-bit words, see
+DESIGN.md §2; CraterLake uses 28-bit and SHARP 36-bit words, so short-word
+RNS is faithful to the paper's own SOTA baselines). Products of two reduced
+values fit in 62 bits, so u64 intermediates are exact.
+
+Four reduction strategies are provided, mirroring the paper's §IV-B
+Montgomery-friendly moduli ablation (benchmarks/fig15):
+
+* ``mulmod``            — generic ``(a*b) % q`` (the "oracle" path)
+* ``mulmod_barrett``    — Barrett with precomputed mu (mulhi via 32-bit split)
+* Montgomery (``mont_*``) — REDC with R=2^32, the digit-serial NMU analogue
+* ``mulmod_solinas``    — shift-add folding for ``q = 2^b - 2^s + 1`` moduli
+                          (Hamming-weight-h reduction: the paper's favored path)
+
+Shapes: data ``(..., L, N)``; per-limb constants ``(L,)`` are broadcast by
+the caller via ``q[:, None]`` (or any broadcast-compatible shape).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U64 = jnp.uint64
+
+
+def to_u64(x) -> jnp.ndarray:
+    return jnp.asarray(x, dtype=U64)
+
+
+# ---------------------------------------------------------------------------
+# add / sub / neg
+# ---------------------------------------------------------------------------
+
+def addmod(a, b, q):
+    r = a + b
+    return jnp.where(r >= q, r - q, r)
+
+
+def submod(a, b, q):
+    return jnp.where(a >= b, a - b, a + (q - b))
+
+
+def negmod(a, q):
+    return jnp.where(a == 0, a, q - a)
+
+
+# ---------------------------------------------------------------------------
+# generic multiply (exact for q < 2^32: product < 2^64)
+# ---------------------------------------------------------------------------
+
+def mulmod(a, b, q):
+    return (a * b) % q
+
+
+def powmod_scalar(a: int, e: int, q: int) -> int:
+    return pow(int(a), int(e), int(q))
+
+
+# ---------------------------------------------------------------------------
+# 32-bit-limb helpers (the "compose wide ops from narrow hardware" move that
+# mirrors FHEmem's digit-serial NMU; also the exact technique the Pallas
+# kernels use on TPU where only 32-bit lanes exist)
+# ---------------------------------------------------------------------------
+
+_MASK32 = U64(0xFFFFFFFF)
+
+
+def mulhi64(a, b):
+    """High 64 bits of the 128-bit product a*b (u64 inputs)."""
+    a_lo = a & _MASK32
+    a_hi = a >> U64(32)
+    b_lo = b & _MASK32
+    b_hi = b >> U64(32)
+    ll = a_lo * b_lo
+    lh = a_lo * b_hi
+    hl = a_hi * b_lo
+    hh = a_hi * b_hi
+    # carry of the low half
+    mid = (ll >> U64(32)) + (lh & _MASK32) + (hl & _MASK32)
+    return hh + (lh >> U64(32)) + (hl >> U64(32)) + (mid >> U64(32))
+
+
+# ---------------------------------------------------------------------------
+# Barrett reduction  (q < 2^31; mu = floor(2^62 / q))
+# ---------------------------------------------------------------------------
+
+def barrett_mu(q: int) -> int:
+    return (1 << 62) // int(q)
+
+
+def _barrett_floor_div_2_62(t, mu):
+    """floor(t*mu / 2^62) computed exactly with 32-bit splits."""
+    t_lo = t & _MASK32
+    t_hi = t >> U64(32)
+    m_lo = mu & _MASK32
+    m_hi = mu >> U64(32)
+    ll = t_lo * m_lo
+    lh = t_lo * m_hi
+    hl = t_hi * m_lo
+    hh = t_hi * m_hi
+    mid = (ll >> U64(32)) + (lh & _MASK32) + (hl & _MASK32)
+    hi128 = hh + (lh >> U64(32)) + (hl >> U64(32)) + (mid >> U64(32))  # bits 64+
+    lo128 = (mid << U64(32)) | (ll & _MASK32)  # bits 0..63
+    return (hi128 << U64(2)) | (lo128 >> U64(62))
+
+
+def mulmod_barrett(a, b, q, mu):
+    """(a*b) mod q via Barrett; a,b reduced, q < 2^31, mu=floor(2^62/q)."""
+    t = a * b
+    est = _barrett_floor_div_2_62(t, mu)
+    r = t - est * q
+    r = jnp.where(r >= q, r - q, r)
+    r = jnp.where(r >= q, r - q, r)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Montgomery (R = 2^32, q < 2^31 odd)
+# ---------------------------------------------------------------------------
+
+def mont_qinv_neg(q: int) -> int:
+    """-q^{-1} mod 2^32."""
+    return (-pow(int(q), -1, 1 << 32)) % (1 << 32)
+
+
+def mont_r2(q: int) -> int:
+    """R^2 mod q with R = 2^32 (for conversion into Montgomery form)."""
+    return (1 << 64) % int(q)
+
+
+def mont_reduce(t, q, qinv_neg):
+    """REDC: t < q*2^32  →  t * 2^-32 mod q  (result < q)."""
+    m = ((t & _MASK32) * qinv_neg) & _MASK32
+    r = (t + m * q) >> U64(32)
+    return jnp.where(r >= q, r - q, r)
+
+
+def mont_mul(a, b, q, qinv_neg):
+    """a*b*2^-32 mod q for a,b < q < 2^31."""
+    return mont_reduce(a * b, q, qinv_neg)
+
+
+def to_mont(a, q, qinv_neg, r2):
+    return mont_mul(a, r2, q, qinv_neg)
+
+
+def from_mont(a, q, qinv_neg):
+    return mont_reduce(a, q, qinv_neg)
+
+
+# ---------------------------------------------------------------------------
+# Solinas / shift-add reduction for q = 2^b - 2^s + 1 (Hamming weight 3).
+# 2^b ≡ 2^s - 1 (mod q), so fold high bits down with shifts and adds only —
+# this is the paper's Montgomery-friendly-moduli fast path (§IV-B), where the
+# NMU issues h additions instead of n.
+# ---------------------------------------------------------------------------
+
+def solinas_reduce(t, q, b: int, s: int):
+    """Reduce t < 2^63 modulo q = 2^b - 2^s + 1 with shift/add folding."""
+    bb = U64(b)
+    mask = (U64(1) << bb) - U64(1)
+    # three folds always suffice for t < 2^63, b >= 20, s <= b-8
+    for _ in range(3):
+        hi = t >> bb
+        lo = t & mask
+        # hi * (2^s - 1) = (hi << s) - hi ;  t = lo + hi*(2^s-1)
+        t = lo + (hi << U64(s)) - hi
+    t = jnp.where(t >= q, t - q, t)
+    t = jnp.where(t >= q, t - q, t)
+    return t
+
+
+def mulmod_solinas(a, b_op, q, b: int, s: int):
+    return solinas_reduce(a * b_op, q, b, s)

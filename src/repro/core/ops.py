@@ -1,0 +1,255 @@
+"""Homomorphic ciphertext algebra: HAdd/HSub/HMul/HRot/Rescale/KeySwitch.
+
+Implements the operations FHEmem accelerates, with the paper's structure:
+HMul = tensor product + relinearization (generalized dnum key-switching:
+ModUp per digit via BConv, evk multiply-accumulate, ModDown) + rescale.
+Rotation = NTT-domain automorphism permutation + key switch with the Galois
+key (beyond-paper: the paper permutes in coefficient domain over its
+interleaved mat layout §IV-E; the eval-domain permutation avoids the
+iNTT/NTT round-trip — see DESIGN.md §3 and the fig15 ablation which retains
+the coeff-domain path as `rotate_coeff_domain`).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import modarith as ma
+from repro.core import rns
+from repro.core.ciphertext import Ciphertext, KeySwitchKey, Plaintext
+from repro.core.context import CkksContext
+
+
+# ---------------------------------------------------------------------------
+# level / scale alignment
+# ---------------------------------------------------------------------------
+
+def mod_switch_to_level(ct: Ciphertext, level: int) -> Ciphertext:
+    """Drop limbs (valid modulus reduction); scale unchanged."""
+    assert level <= ct.level
+    if level == ct.level:
+        return ct
+    return Ciphertext(ct.data[:, : level + 1], level, ct.scale)
+
+
+def _align(ct0: Ciphertext, ct1: Ciphertext) -> Tuple[Ciphertext, Ciphertext]:
+    lvl = min(ct0.level, ct1.level)
+    return mod_switch_to_level(ct0, lvl), mod_switch_to_level(ct1, lvl)
+
+
+# ---------------------------------------------------------------------------
+# additive ops
+# ---------------------------------------------------------------------------
+
+def hadd(ctx: CkksContext, ct0: Ciphertext, ct1: Ciphertext) -> Ciphertext:
+    ct0, ct1 = _align(ct0, ct1)
+    assert abs(ct0.scale / ct1.scale - 1.0) < 1e-6, "scale mismatch in hadd"
+    q = ctx.q_all[: ct0.n_limbs]
+    return Ciphertext(ma.addmod(ct0.data, ct1.data, q[:, None]),
+                      ct0.level, ct0.scale)
+
+
+def hsub(ctx: CkksContext, ct0: Ciphertext, ct1: Ciphertext) -> Ciphertext:
+    ct0, ct1 = _align(ct0, ct1)
+    assert abs(ct0.scale / ct1.scale - 1.0) < 1e-6, "scale mismatch in hsub"
+    q = ctx.q_all[: ct0.n_limbs]
+    return Ciphertext(ma.submod(ct0.data, ct1.data, q[:, None]),
+                      ct0.level, ct0.scale)
+
+
+def hneg(ctx: CkksContext, ct: Ciphertext) -> Ciphertext:
+    q = ctx.q_all[: ct.n_limbs]
+    return Ciphertext(ma.negmod(ct.data, q[:, None]), ct.level, ct.scale)
+
+
+def padd(ctx: CkksContext, ct: Ciphertext, pt: Plaintext) -> Ciphertext:
+    assert pt.level >= ct.level
+    assert abs(ct.scale / pt.scale - 1.0) < 1e-6, "scale mismatch in padd"
+    q = ctx.q_all[: ct.n_limbs]
+    b = ma.addmod(ct.data[0], pt.data[: ct.n_limbs], q[:, None])
+    return Ciphertext(jnp.stack([b, ct.data[1]]), ct.level, ct.scale)
+
+
+# ---------------------------------------------------------------------------
+# multiplicative ops
+# ---------------------------------------------------------------------------
+
+def pmul(ctx: CkksContext, ct: Ciphertext, pt: Plaintext,
+         do_rescale: bool = True) -> Ciphertext:
+    """Ciphertext x plaintext."""
+    assert pt.level >= ct.level
+    q = ctx.q_all[: ct.n_limbs]
+    data = ma.mulmod(ct.data, pt.data[None, : ct.n_limbs], q[:, None])
+    out = Ciphertext(data, ct.level, ct.scale * pt.scale)
+    return rescale(ctx, out) if do_rescale else out
+
+
+def pmul_scalar_int(ctx: CkksContext, ct: Ciphertext, c: int) -> Ciphertext:
+    """Multiply by a small exact integer (no scale change)."""
+    q = ctx.q_all[: ct.n_limbs]
+    cv = jnp.asarray(np.array([c % ctx.primes[i] for i in range(ct.n_limbs)],
+                              dtype=np.uint64))
+    return Ciphertext(ma.mulmod(ct.data, cv[None, :, None], q[:, None]),
+                      ct.level, ct.scale)
+
+
+def hmul(ctx: CkksContext, ct0: Ciphertext, ct1: Ciphertext,
+         relin_key: KeySwitchKey, do_rescale: bool = True) -> Ciphertext:
+    """Homomorphic multiply: tensor + relinearize (+ rescale)."""
+    ct0, ct1 = _align(ct0, ct1)
+    q = ctx.q_all[: ct0.n_limbs][:, None]
+    b0, a0 = ct0.data[0], ct0.data[1]
+    b1, a1 = ct1.data[0], ct1.data[1]
+    d0 = ma.mulmod(b0, b1, q)
+    d1 = ma.addmod(ma.mulmod(a0, b1, q), ma.mulmod(a1, b0, q), q)
+    d2 = ma.mulmod(a0, a1, q)
+    e0, e1 = key_switch(ctx, d2, ct0.level, relin_key)
+    data = jnp.stack([ma.addmod(d0, e0, q), ma.addmod(d1, e1, q)])
+    out = Ciphertext(data, ct0.level, ct0.scale * ct1.scale)
+    return rescale(ctx, out) if do_rescale else out
+
+
+def hsquare(ctx: CkksContext, ct: Ciphertext, relin_key: KeySwitchKey,
+            do_rescale: bool = True) -> Ciphertext:
+    q = ctx.q_all[: ct.n_limbs][:, None]
+    b, a = ct.data[0], ct.data[1]
+    d0 = ma.mulmod(b, b, q)
+    ab = ma.mulmod(a, b, q)
+    d1 = ma.addmod(ab, ab, q)
+    d2 = ma.mulmod(a, a, q)
+    e0, e1 = key_switch(ctx, d2, ct.level, relin_key)
+    data = jnp.stack([ma.addmod(d0, e0, q), ma.addmod(d1, e1, q)])
+    out = Ciphertext(data, ct.level, ct.scale * ct.scale)
+    return rescale(ctx, out) if do_rescale else out
+
+
+# ---------------------------------------------------------------------------
+# rescale (divide-and-round by the last prime)
+# ---------------------------------------------------------------------------
+
+def rescale(ctx: CkksContext, ct: Ciphertext) -> Ciphertext:
+    assert ct.level >= 1, "no levels left to rescale"
+    lvl = ct.level
+    last_idx = [lvl]
+    rem_idx = ctx.q_idx(lvl - 1)
+    q_rem = ctx.q_all[: lvl][:, None]
+    # last limb -> coefficient domain
+    c_last = ctx.intt(ct.data[:, lvl:lvl + 1, :], last_idx)   # (2,1,N)
+    # broadcast into each remaining modulus (floor-divide variant)
+    t = c_last % q_rem                                         # (2,L,N)
+    t_ntt = ctx.ntt(t, rem_idx)
+    diff = ma.submod(ct.data[:, :lvl], t_ntt, q_rem)
+    out = ma.mulmod(diff, ctx.qlast_inv(lvl)[:, None], q_rem)
+    new_scale = ct.scale / ctx.q_primes[lvl]
+    return Ciphertext(out, lvl - 1, new_scale)
+
+
+# ---------------------------------------------------------------------------
+# key switching (generalized dnum digits, Han–Ki)
+# ---------------------------------------------------------------------------
+
+def mod_up(ctx: CkksContext, dig_ntt: jnp.ndarray, dig_idx: List[int],
+           target_idx: List[int]) -> jnp.ndarray:
+    """ModUp one digit from its own basis to target basis (NTT in/out).
+
+    Digit limbs present in target are copied; the rest come from an
+    iNTT -> BConv -> NTT round trip (the paper's §II-A flow).
+    """
+    other_idx = [i for i in target_idx if i not in dig_idx]
+    dig_coeff = ctx.intt(dig_ntt, dig_idx)
+    tabs = ctx.bconv_tables(dig_idx, other_idx)
+    conv = rns.bconv(dig_coeff, tabs)
+    conv_ntt = ctx.ntt(conv, other_idx)
+    # interleave into target order
+    n = ctx.n
+    out = jnp.zeros((len(target_idx), n), dtype=jnp.uint64)
+    pos = {g: i for i, g in enumerate(target_idx)}
+    dig_pos = np.array([pos[g] for g in dig_idx])
+    oth_pos = np.array([pos[g] for g in other_idx])
+    out = out.at[dig_pos].set(dig_ntt)
+    out = out.at[oth_pos].set(conv_ntt)
+    return out
+
+
+def key_switch(ctx: CkksContext, d2: jnp.ndarray, level: int,
+               ksk: KeySwitchKey) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Switch d2 (level+1, N limbs, NTT) to the key encrypted in ksk.
+
+    Returns (delta_b, delta_a) at level `level` (Q basis only), already
+    ModDown'ed (divided by P).
+    """
+    idx_q = ctx.q_idx(level)
+    idx_p = ctx.p_idx()
+    target = idx_q + idx_p
+    q_t = ctx.q_all[np.array(target)][:, None]
+    digits = ctx.params.digit_indices(level)
+    acc0 = jnp.zeros((len(target), ctx.n), dtype=jnp.uint64)
+    acc1 = jnp.zeros((len(target), ctx.n), dtype=jnp.uint64)
+    ksk_sel = ksk.data[:, :, np.array(target)]   # (dnum', 2, T, N)
+    for d, J in enumerate(digits):
+        raised = mod_up(ctx, d2[np.array(J)], J, target)
+        acc0 = ma.addmod(acc0, ma.mulmod(raised, ksk_sel[d, 0], q_t), q_t)
+        acc1 = ma.addmod(acc1, ma.mulmod(raised, ksk_sel[d, 1], q_t), q_t)
+    return (_mod_down(ctx, acc0, idx_q, idx_p),
+            _mod_down(ctx, acc1, idx_q, idx_p))
+
+
+def _mod_down(ctx: CkksContext, a: jnp.ndarray, idx_q: List[int],
+              idx_p: List[int]) -> jnp.ndarray:
+    """(a_Q - BConv_{P->Q}(a_P)) * P^{-1} over Q. a: (|Q|+|P|, N) NTT."""
+    nq = len(idx_q)
+    a_q, a_p = a[:nq], a[nq:]
+    p_coeff = ctx.intt(a_p, idx_p)
+    tabs = ctx.bconv_tables(idx_p, idx_q)
+    conv = rns.bconv(p_coeff, tabs)
+    conv_ntt = ctx.ntt(conv, idx_q)
+    q = ctx.q_all[: nq][:, None]
+    return rns.mod_down_coeff(a_q, conv_ntt, ctx.p_inv_mod_q[:nq], q[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# rotation / conjugation
+# ---------------------------------------------------------------------------
+
+def _apply_galois(ctx: CkksContext, ct: Ciphertext, elt: int,
+                  gk: KeySwitchKey) -> Ciphertext:
+    perm = ctx.eval_perm(elt)
+    q = ctx.q_all[: ct.n_limbs][:, None]
+    b_rot = ct.data[0][:, perm]
+    a_rot = ct.data[1][:, perm]
+    e0, e1 = key_switch(ctx, a_rot, ct.level, gk)
+    return Ciphertext(jnp.stack([ma.addmod(b_rot, e0, q), e1]),
+                      ct.level, ct.scale)
+
+
+def rotate(ctx: CkksContext, ct: Ciphertext, step: int,
+           gk: KeySwitchKey) -> Ciphertext:
+    """Rotate packed slots by `step` (slot i of output = slot i+step of input)."""
+    return _apply_galois(ctx, ct, ctx.rotation_element(step), gk)
+
+
+def conjugate(ctx: CkksContext, ct: Ciphertext,
+              gk: KeySwitchKey) -> Ciphertext:
+    return _apply_galois(ctx, ct, ctx.conj_element, gk)
+
+
+def rotate_coeff_domain(ctx: CkksContext, ct: Ciphertext, step: int,
+                        gk: KeySwitchKey) -> Ciphertext:
+    """Paper-faithful rotation: automorphism applied in coefficient domain
+    (iNTT -> index-map gather with sign -> NTT), then key switch.
+    Numerically identical to `rotate`; kept for the fig15-style ablation."""
+    from repro.core import ntt as nttm
+    elt = ctx.rotation_element(step)
+    idx = ctx.q_idx(ct.level)
+    q = ctx.q_all[: ct.n_limbs][:, None]
+    src, neg = nttm.coeff_perm(elt, ctx.n)
+    coeff = ctx.intt(ct.data, idx)
+    gathered = coeff[..., src]
+    rotated = jnp.where(jnp.asarray(neg)[None, None, :],
+                        ma.negmod(gathered, q), gathered)
+    data = ctx.ntt(rotated, idx)
+    e0, e1 = key_switch(ctx, data[1], ct.level, gk)
+    return Ciphertext(jnp.stack([ma.addmod(data[0], e0, q), e1]),
+                      ct.level, ct.scale)

@@ -1,0 +1,121 @@
+"""RNS basis tooling: fast base conversion (BConv), ModDown, Rescale.
+
+BConv (paper §II-A eq.(1), §IV-D) is the all-to-all primitive of FHE:
+
+    BConv_{Q->P}(a)_i = [ sum_j [a_j * qhat_j^{-1}]_{q_j} * [qhat_j]_{p_i} ]_{p_i}
+
+Every output limb depends on every input limb. In FHEmem, limbs live in
+different banks and this runs on the partial-chain inter-bank network; here
+limbs live on different devices along the `model` mesh axis and the same
+dependency becomes an all_gather/psum_scatter (repro/fhe_dist). This module
+is the exact single-device reference; it operates on *coefficient-domain*
+polys as the paper prescribes (an iNTT precedes BConv).
+
+This is the "fast" (HPS-style) conversion: the result may be off by a small
+multiple of Q — the standard full-RNS CKKS approximation the paper also
+inherits from [24].
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import modarith as ma
+
+
+class BConvTables(NamedTuple):
+    """Host-precomputed constants for one (src basis -> dst basis) pair."""
+    qhat_inv: jnp.ndarray   # (S,)  [qhat_j^{-1}]_{q_j}
+    w: jnp.ndarray          # (S, D) [qhat_j]_{p_i}
+    src_q: jnp.ndarray      # (S,)
+    dst_q: jnp.ndarray      # (D,)
+
+
+def make_bconv_tables(src_primes: Sequence[int],
+                      dst_primes: Sequence[int]) -> BConvTables:
+    src = [int(p) for p in src_primes]
+    dst = [int(p) for p in dst_primes]
+    big_q = 1
+    for p in src:
+        big_q *= p
+    qhat = [big_q // p for p in src]
+    qhat_inv = [pow(h % p, -1, p) for h, p in zip(qhat, src)]
+    w = np.array([[h % pi for pi in dst] for h in qhat], dtype=np.uint64)
+    return BConvTables(
+        qhat_inv=jnp.asarray(np.array(qhat_inv, dtype=np.uint64)),
+        w=jnp.asarray(w),
+        src_q=jnp.asarray(np.array(src, dtype=np.uint64)),
+        dst_q=jnp.asarray(np.array(dst, dtype=np.uint64)),
+    )
+
+
+def bconv(a: jnp.ndarray, t: BConvTables) -> jnp.ndarray:
+    """Fast base conversion. a: (..., S, N) coeff domain -> (..., D, N).
+
+    Reference schedule: reduce each partial product immediately (the
+    kernels use lazy accumulation — see repro/kernels/bconv.py).
+    """
+    v = ma.mulmod(a, t.qhat_inv[:, None], t.src_q[:, None])   # (..., S, N)
+    s = v.shape[-2]
+    acc = None
+    for j in range(s):
+        # (D, 1) * (..., 1, N) -> (..., D, N), reduced mod dst
+        term = ma.mulmod(v[..., j:j + 1, :], t.w[j][:, None], t.dst_q[:, None])
+        acc = term if acc is None else acc + term   # sum of reduced < S*2^31
+    return acc % t.dst_q[:, None]
+
+
+def bconv_matmul(a: jnp.ndarray, t: BConvTables) -> jnp.ndarray:
+    """BConv as an explicit (S,N)x(S,D) contraction — the form the Pallas
+    kernel and the MXU mapping use. Exact: lazy u64 accumulation with
+    periodic folding every 8 partial products (8 * 2^62-ish < 2^64 needs
+    products < 2^61; v<2^31, w<2^30 in our parameter regime)."""
+    v = ma.mulmod(a, t.qhat_inv[:, None], t.src_q[:, None])
+    s = v.shape[-2]
+    acc = jnp.zeros(a.shape[:-2] + (t.w.shape[1],) + a.shape[-1:], dtype=jnp.uint64)
+    run = None
+    for j in range(s):
+        prod = v[..., j:j + 1, :] * t.w[j][:, None]            # < 2^61, unreduced
+        run = prod if run is None else run + prod
+        if (j + 1) % 4 == 0 or j == s - 1:                     # fold every 4
+            acc = (acc + run % t.dst_q[:, None]) % t.dst_q[:, None]
+            run = None
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# ModDown / Rescale helpers (coeff-domain cores; NTT wrapping in ops.py)
+# ---------------------------------------------------------------------------
+
+def mod_down_coeff(a_q: jnp.ndarray, a_p_converted: jnp.ndarray,
+                   p_inv_mod_q: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """(a_q - BConv_{P->Q}(a_p)) * P^{-1} mod q. All (..., L, N) coeff/NTT."""
+    diff = ma.submod(a_q, a_p_converted % q[:, None], q[:, None])
+    return ma.mulmod(diff, p_inv_mod_q[:, None], q[:, None])
+
+
+def exact_div_by_last_coeff(a: jnp.ndarray, q_last_inv: jnp.ndarray,
+                            q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Rescale core: given a (..., L, N) with last limb already broadcast-
+    subtracted, multiply by q_last^{-1} mod q_i. Returns (..., L-1, N)."""
+    return ma.mulmod(a, q_last_inv[:, None], q[:, None])
+
+
+def crt_lift_centered(limbs: np.ndarray, primes: Sequence[int]) -> np.ndarray:
+    """Exact CRT reconstruction to centered Python ints (host, object array).
+
+    limbs: (L, N) uint64. Returns (N,) object array in (-Q/2, Q/2].
+    Used only for decode/decrypt validation — off the hot path.
+    """
+    primes = [int(p) for p in primes]
+    big_q = 1
+    for p in primes:
+        big_q *= p
+    acc = np.zeros(limbs.shape[-1], dtype=object)
+    for j, p in enumerate(primes):
+        qhat = big_q // p
+        corr = (qhat * pow(qhat % p, -1, p))
+        acc = (acc + limbs[j].astype(object) * corr) % big_q
+    return np.where(acc > big_q // 2, acc - big_q, acc)

@@ -1,0 +1,41 @@
+"""Limb-sharded data layout for distributed FHE (paper §IV-A on a mesh).
+
+The bank↔limb mapping transfers directly: RNS limbs of each polynomial are
+distributed round-robin across devices along the `model` axis (banks), the
+batch of independent ciphertexts across `data` (separate pipelines), and
+pods replicate keys (stack-level distribution in §V-A's 2-stack system).
+
+Arrays:
+    ciphertext  (2, L, N)        -> P(None, 'model', None)
+    ct batch    (B, 2, L, N)     -> P('data', None, 'model', None)
+    evk         (dnum, 2, T, N)  -> P(None, None, 'model', None)
+    NTT tables  (L, N)           -> P('model', None)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def limb_specs(mesh: Mesh) -> Dict[str, NamedSharding]:
+    m = "model" if "model" in mesh.axis_names else mesh.axis_names[-1]
+    d = "data" if "data" in mesh.axis_names else mesh.axis_names[0]
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    return {
+        "ct": ns(None, m, None),
+        "ct_batch": ns(d, None, m, None),
+        "poly": ns(m, None),
+        "evk": ns(None, None, m, None),
+        "tables": ns(m, None),
+        "replicated": ns(),
+    }
+
+
+def shardable_limbs(n_limbs: int, mesh: Mesh) -> bool:
+    m = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    return n_limbs % m == 0

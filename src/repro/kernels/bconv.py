@@ -1,0 +1,86 @@
+"""Pallas TPU kernel for the BConv accumulation (paper §II-A eq.(1), §IV-D).
+
+out[d, n] = sum_j v[j, n] * w[j, d]  (mod p_d)
+
+This is FHE's all-to-all primitive: in FHEmem the partial products cross
+the inter-bank chain network; on TPU each (d, n-block) program holds its
+output tile in VMEM and streams the S source limbs through the VPU with a
+static unrolled multiply-accumulate (the adder-tree of §IV-D, depth-1).
+
+Two reduction schedules:
+* eager: Montgomery-reduce every partial product (baseline);
+* lazy  (`lazy=True`): accumulate 2^31-bounded sums in (hi, lo) u32 pairs
+  and fold every 4 products — fewer REDC ops, the §Perf variant. Both are
+  exact; tests compare them bit-for-bit against ref.bconv_ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import addmod32, mont_mul32, mul32_wide
+
+U32 = jnp.uint32
+
+
+def _bconv_kernel(v_ref, w_ref, p_ref, pinv_ref, o_ref):
+    """v (S, bn); w_mont (1, S); p/pinv (1, 1). out (1, bn)."""
+    p = p_ref[0, 0]
+    pi = pinv_ref[0, 0]
+    s = v_ref.shape[0]
+    acc = jnp.zeros(o_ref.shape, U32)
+    for j in range(s):
+        prod = mont_mul32(v_ref[j, :][None, :], w_ref[0, j], p, pi)
+        acc = addmod32(acc, prod, p)
+    o_ref[...] = acc
+
+
+def _bconv_kernel_lazy(v_ref, w_ref, p_ref, pinv_ref, o_ref):
+    """Lazy variant: defer the modular fold across groups of products.
+
+    mont_mul32 outputs are < p < 2^31; sums of two stay < 2^32. We add
+    pairs before the modular fold, halving the addmod count.
+    """
+    p = p_ref[0, 0]
+    pi = pinv_ref[0, 0]
+    s = v_ref.shape[0]
+    acc = jnp.zeros(o_ref.shape, U32)
+    j = 0
+    while j < s:
+        prod = mont_mul32(v_ref[j, :][None, :], w_ref[0, j], p, pi)
+        if j + 1 < s:
+            prod2 = mont_mul32(v_ref[j + 1, :][None, :], w_ref[0, j + 1],
+                               p, pi)
+            pair = prod + prod2                     # < 2^32, no overflow
+            pair = jnp.where(pair >= p, pair - p, pair)
+            pair = jnp.where(pair >= p, pair - p, pair)
+            j += 2
+        else:
+            pair = prod
+            j += 1
+        acc = addmod32(acc, pair, p)
+    o_ref[...] = acc
+
+
+def bconv_pallas(v, w_mont, p, pinv_neg, *, block_n: int = 512,
+                 lazy: bool = False, interpret: bool = True):
+    """v: (S, N) u32 (source values, reduced mod their own q_j);
+    w_mont: (D, S) u32 — [qhat_j]_{p_d} in Montgomery form w.r.t. p_d;
+    p, pinv_neg: (D,) u32. Returns (D, N) u32."""
+    s, n = v.shape
+    d = w_mont.shape[0]
+    block_n = min(block_n, n)
+    grid = (d, n // block_n)
+    kern = _bconv_kernel_lazy if lazy else _bconv_kernel
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((s, block_n), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, s), lambda i, j: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, n), U32),
+        interpret=interpret,
+    )(v, w_mont, p[:, None], pinv_neg[:, None])

@@ -1,0 +1,70 @@
+"""Pallas TPU kernels for elementwise modular arithmetic — the NMU analog.
+
+Kernels use ONLY u32 ops (16-bit limb composition + Montgomery REDC,
+kernels/common.py), so they lower to the TPU VPU. Block shapes put whole
+(1, block_n) coefficient rows in VMEM; per-limb constants ride along as
+(1, 1) blocks.
+
+Semantics contract (see ref.py): operand `b` is pre-converted to Montgomery
+form by the ops.py wrapper, so `mont_mul32(a, b_mont) == a*b mod q` exactly.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import addmod32, mont_mul32
+
+U32 = jnp.uint32
+
+
+def _modmul_kernel(a_ref, b_ref, q_ref, qinv_ref, o_ref):
+    q = q_ref[0, 0]
+    qi = qinv_ref[0, 0]
+    o_ref[...] = mont_mul32(a_ref[...], b_ref[...], q, qi)
+
+
+def _mulacc_kernel(a_ref, b_ref, c_ref, q_ref, qinv_ref, o_ref):
+    q = q_ref[0, 0]
+    qi = qinv_ref[0, 0]
+    prod = mont_mul32(a_ref[...], b_ref[...], q, qi)
+    o_ref[...] = addmod32(prod, c_ref[...], q)
+
+
+def modmul_pallas(a, b_mont, q, qinv_neg, *, block_n: int = 512,
+                  interpret: bool = True):
+    """a, b_mont: (L, N) u32; q, qinv_neg: (L,) u32. Returns (a*b) mod q."""
+    l, n = a.shape
+    block_n = min(block_n, n)
+    grid = (l, n // block_n)
+    row = pl.BlockSpec((1, block_n), lambda i, j: (i, j))
+    scal = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        _modmul_kernel,
+        grid=grid,
+        in_specs=[row, row, scal, scal],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((l, n), U32),
+        interpret=interpret,
+    )(a, b_mont, q[:, None], qinv_neg[:, None])
+
+
+def mulacc_pallas(a, b_mont, c, q, qinv_neg, *, block_n: int = 512,
+                  interpret: bool = True):
+    """(a*b + c) mod q — fused NMU multiply-accumulate."""
+    l, n = a.shape
+    block_n = min(block_n, n)
+    grid = (l, n // block_n)
+    row = pl.BlockSpec((1, block_n), lambda i, j: (i, j))
+    scal = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        _mulacc_kernel,
+        grid=grid,
+        in_specs=[row, row, row, scal, scal],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((l, n), U32),
+        interpret=interpret,
+    )(a, b_mont, c, q[:, None], qinv_neg[:, None])

@@ -1,0 +1,123 @@
+"""Pallas TPU kernels for the four-step negacyclic NTT — FHEmem's
+three-phase NTT (§IV-C) mapped to VMEM tiles (DESIGN.md §2).
+
+Phase 1 (vertical / "inter-mat"): column negacyclic NTTs. Each program
+holds an (R, block_c) tile in VMEM; butterflies run along the sublane axis
+with per-stage twiddles broadcast across columns (twiddle index depends
+only on the row — exactly why FHEmem can drive all mats of a subarray with
+one control word).
+
+Phases 2+3 (twiddle correction + horizontal / "intra-mat"): fused kernel.
+Each program holds a (block_r, C) tile, applies the fused elementwise
+correction table (correction x row pre-twist, precomputed in Montgomery
+form), transposes in-register, runs the C-point stages, transposes back.
+
+All arithmetic is u32 Montgomery (kernels/common.py). Twiddle tables are
+pre-converted to Montgomery form host-side, so every in-kernel multiply is
+a single REDC — the "on-the-fly twiddle" trade-off the paper makes
+(§IV-A.3) becomes precompute-vs-bandwidth here and is measured in
+benchmarks/fig14_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import addmod32, mont_mul32, submod32
+from repro.kernels.ref import FourStepTables
+
+U32 = jnp.uint32
+
+
+def _ct_stages_axis0(x, rp_mont, q, qi):
+    """Harvey CT butterflies along axis 0 of x (R, B); rp_mont (R,)."""
+    r = x.shape[0]
+    b = x.shape[1]
+    m = 1
+    while m < r:
+        t = r // (2 * m)
+        xr = x.reshape(m, 2 * t, b)
+        w = rp_mont[m:2 * m]                       # (m,)
+        u = xr[:, :t]
+        v = mont_mul32(xr[:, t:], w[:, None, None], q, qi)
+        x = jnp.concatenate([addmod32(u, v, q), submod32(u, v, q)],
+                            axis=1).reshape(r, b)
+        m *= 2
+    return x
+
+
+def _ntt_col_kernel(x_ref, rp_ref, q_ref, qi_ref, o_ref):
+    """x (R, block_c); rp_mont (1, R); scalars (1,1)."""
+    q = q_ref[0, 0]
+    qi = qi_ref[0, 0]
+    o_ref[...] = _ct_stages_axis0(x_ref[...], rp_ref[0, :], q, qi)
+
+
+def _ntt_row_kernel(x_ref, t2_ref, rp_ref, q_ref, qi_ref, o_ref):
+    """x (block_r, C); t2_mont (block_r, C); rp_mont (1, C)."""
+    q = q_ref[0, 0]
+    qi = qi_ref[0, 0]
+    x = mont_mul32(x_ref[...], t2_ref[...], q, qi)   # phase 2 (fused)
+    xt = x.T                                          # (C, block_r)
+    xt = _ct_stages_axis0(xt, rp_ref[0, :], q, qi)
+    o_ref[...] = xt.T
+
+
+class FourStepKernelTables:
+    """Montgomery-form device tables derived from ref.FourStepTables."""
+
+    def __init__(self, tabs: FourStepTables):
+        self.tabs = tabs
+        q = tabs.q
+        r_mont = (1 << 32) % q
+
+        def to_mont(arr):
+            return ((arr.astype(object) * r_mont) % q).astype(np.uint32)
+
+        self.q32 = jnp.asarray(np.array([q], dtype=np.uint32))
+        qinv = (-pow(q, -1, 1 << 32)) % (1 << 32)
+        self.qinv32 = jnp.asarray(np.array([qinv], dtype=np.uint32))
+        self.rp_col_m = jnp.asarray(to_mont(tabs.rp_col))[None, :]
+        self.rp_row_m = jnp.asarray(to_mont(tabs.rp_row))[None, :]
+        self.t2_m = jnp.asarray(to_mont(tabs.t2_fused))
+
+
+def ntt_four_step_pallas(a, kt: FourStepKernelTables, *,
+                         block_c: int = 128, block_r: int = 8,
+                         interpret: bool = True):
+    """a: (N,) u32 coefficients -> (N,) u32 in kernel order (see ref)."""
+    tabs = kt.tabs
+    r, c = tabs.r, tabs.c
+    x = a.reshape(r, c)
+    block_c = min(block_c, c)
+    block_r = min(block_r, r)
+    # phase 1: columns
+    y = pl.pallas_call(
+        _ntt_col_kernel,
+        grid=(c // block_c,),
+        in_specs=[pl.BlockSpec((r, block_c), lambda j: (0, j)),
+                  pl.BlockSpec((1, r), lambda j: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda j: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda j: (0, 0))],
+        out_specs=pl.BlockSpec((r, block_c), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), U32),
+        interpret=interpret,
+    )(x, kt.rp_col_m, kt.q32[:, None], kt.qinv32[:, None])
+    # phases 2+3: correction + rows
+    z = pl.pallas_call(
+        _ntt_row_kernel,
+        grid=(r // block_r,),
+        in_specs=[pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+                  pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+                  pl.BlockSpec((1, c), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), U32),
+        interpret=interpret,
+    )(y, kt.t2_m, kt.rp_row_m, kt.q32[:, None], kt.qinv32[:, None])
+    return z.reshape(-1)

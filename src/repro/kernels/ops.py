@@ -1,0 +1,97 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles Montgomery-form conversion of the constant operands (host/jit-side
+u64 math via core.modarith — cheap and exact), dtype casts u64<->u32, and
+interpret-mode selection (interpret=True on CPU; compiled on TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import modarith as ma
+from repro.kernels import bconv as bconv_k
+from repro.kernels import modmul as modmul_k
+from repro.kernels.ntt import FourStepKernelTables, ntt_four_step_pallas
+from repro.kernels.ref import FourStepTables
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _mont_consts(primes: Sequence[int]):
+    q32 = jnp.asarray(np.array(primes, dtype=np.uint32))
+    qinv = jnp.asarray(np.array(
+        [(-pow(int(p), -1, 1 << 32)) % (1 << 32) for p in primes],
+        dtype=np.uint32))
+    # R mod q: plain mulmod(b, rm) == b * 2^32 mod q (Montgomery form)
+    rm = jnp.asarray(np.array([(1 << 32) % int(p) for p in primes],
+                              dtype=np.uint64))
+    return q32, qinv, rm
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _modmul_impl(a, b, q64, q32, qinv, rm, interpret=True):
+    b_mont = ma.mulmod(b, rm[:, None], q64[:, None]).astype(jnp.uint32)
+    return modmul_k.modmul_pallas(a.astype(jnp.uint32), b_mont, q32, qinv,
+                                  interpret=interpret).astype(jnp.uint64)
+
+
+def modmul(a, b, primes: Sequence[int], interpret=None):
+    """(a*b) mod q per limb. a, b: (L, N) u64; primes: python ints."""
+    q32, qinv, rm = _mont_consts(primes)
+    q64 = jnp.asarray(np.array(primes, dtype=np.uint64))
+    itp = _default_interpret() if interpret is None else interpret
+    return _modmul_impl(a, b, q64, q32, qinv, rm, interpret=itp)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _mulacc_impl(a, b, c, q64, q32, qinv, rm, interpret=True):
+    b_mont = ma.mulmod(b, rm[:, None], q64[:, None]).astype(jnp.uint32)
+    return modmul_k.mulacc_pallas(a.astype(jnp.uint32), b_mont,
+                                  c.astype(jnp.uint32), q32, qinv,
+                                  interpret=interpret).astype(jnp.uint64)
+
+
+def mulacc(a, b, c, primes: Sequence[int], interpret=None):
+    """(a*b + c) mod q per limb."""
+    q32, qinv, rm = _mont_consts(primes)
+    q64 = jnp.asarray(np.array(primes, dtype=np.uint64))
+    itp = _default_interpret() if interpret is None else interpret
+    return _mulacc_impl(a, b, c, q64, q32, qinv, rm, interpret=itp)
+
+
+def bconv(v, w, dst_primes: Sequence[int], lazy: bool = False,
+          interpret=None):
+    """out[d] = sum_j v[j]*w[j,d] mod p_d. v: (S,N) u64; w: (S,D) u64."""
+    p32, pinv, _ = _mont_consts(dst_primes)
+    itp = _default_interpret() if interpret is None else interpret
+    # w -> Montgomery form w.r.t. each dst prime; layout (D, S)
+    wt = w.T  # (D, S)
+    p64 = jnp.asarray(np.array(dst_primes, dtype=np.uint64))
+    rm = jnp.asarray(np.array([(1 << 32) % int(p) for p in dst_primes],
+                              dtype=np.uint64))
+    w_mont = ma.mulmod(wt % p64[:, None], rm[:, None],
+                       p64[:, None]).astype(jnp.uint32)
+    return bconv_k.bconv_pallas(v.astype(jnp.uint32), w_mont, p32, pinv,
+                                lazy=lazy,
+                                interpret=itp).astype(jnp.uint64)
+
+
+class NttKernel:
+    """Four-step NTT kernel bound to one modulus (tables cached)."""
+
+    def __init__(self, q: int, psi: int, log_n: int, log_r: int):
+        self.tabs = FourStepTables(q, psi, log_n, log_r)
+        self.kt = FourStepKernelTables(self.tabs)
+
+    def __call__(self, a, interpret=None, **blocks):
+        itp = _default_interpret() if interpret is None else interpret
+        return ntt_four_step_pallas(a.astype(jnp.uint32), self.kt,
+                                    interpret=itp,
+                                    **blocks).astype(jnp.uint64)

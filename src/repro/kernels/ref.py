@@ -1,0 +1,140 @@
+"""Pure-jnp oracles for every Pallas kernel (exact, u64 arithmetic).
+
+These define the semantics the kernels must match bit-for-bit; tests sweep
+shapes/dtypes and assert exact equality (integer kernels — allclose becomes
+array_equal).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import modarith as ma
+from repro.core import ntt as nttm
+
+
+def modmul_ref(a, b, q):
+    """Elementwise (a*b) mod q. a,b: (L, N) u64-safe ints; q: (L,)."""
+    a = a.astype(jnp.uint64)
+    b = b.astype(jnp.uint64)
+    q = q.astype(jnp.uint64)
+    return ma.mulmod(a, b, q[:, None])
+
+
+def modadd_ref(a, b, q):
+    return ma.addmod(a.astype(jnp.uint64), b.astype(jnp.uint64),
+                     q.astype(jnp.uint64)[:, None])
+
+
+def fused_mulacc_ref(a, b, c, q):
+    """(a*b + c) mod q — the NMU multiply-accumulate."""
+    a = a.astype(jnp.uint64)
+    b = b.astype(jnp.uint64)
+    c = c.astype(jnp.uint64)
+    q = q.astype(jnp.uint64)[:, None]
+    return ma.addmod(ma.mulmod(a, b, q), c % q, q)
+
+
+def bconv_ref(v, w, p):
+    """BConv accumulation: out[d, n] = sum_j v[j, n] * w[j, d] mod p[d].
+
+    v: (S, N), w: (S, D), p: (D,) — exact via u64 with per-term reduction.
+    """
+    v = v.astype(jnp.uint64)
+    w = w.astype(jnp.uint64)
+    p = p.astype(jnp.uint64)
+    s = v.shape[0]
+    acc = jnp.zeros((w.shape[1], v.shape[1]), jnp.uint64)
+    for j in range(s):
+        term = (v[j][None, :] * w[j][:, None]) % p[:, None]
+        acc = acc + term
+    return acc % p[:, None]
+
+
+# ---------------------------------------------------------------------------
+# four-step negacyclic NTT reference (kernel ordering)
+# ---------------------------------------------------------------------------
+
+class FourStepTables:
+    """Host tables for the (R x C) four-step negacyclic NTT.
+
+    Math (DESIGN.md §2 — the FHEmem 16x16 mat-array analogue):
+        hat a_k = sum_j a_j psi^j omega^{jk},  omega = psi^2,  j = r*C + c.
+    Split k = ku + R*kv:
+        phase 1 (vertical / inter-mat):  column negacyclic NTT with root
+            psi_col = psi^C — Harvey CT butterflies INCLUDE the psi_col^r
+            twist, yielding slot u = cyclic column index brv_R(u);
+        phase 2: elementwise correction T2[u,c] = psi^c * omega^{c*brv_R(u)};
+        phase 3 (horizontal / intra-mat): row cyclic DFT of size C via
+            negacyclic CT with root psi_row = psi^R and an inverse pre-twist
+            psi_row^{-c} (cancels CT's built-in twist); slot v = brv_C(v).
+
+    Kernel output order: out[u, v] = hat a at k = brv_R(u) + R * brv_C(v).
+    """
+
+    def __init__(self, q: int, psi: int, log_n: int, log_r: int):
+        n = 1 << log_n
+        r = 1 << log_r
+        c = n // r
+        self.q, self.n, self.r, self.c = q, n, r, c
+        omega = psi * psi % q
+        psi_col = pow(psi, c, q)      # 2R-th root (psi_col^R = psi^N = -1)
+        psi_row = pow(psi, r, q)      # 2C-th root
+        brv_r = nttm.bit_reverse_vector(r)
+        brv_c = nttm.bit_reverse_vector(c)
+        self.brv_r, self.brv_c = brv_r, brv_c
+        self.rp_col = np.array([pow(psi_col, int(b), q) for b in brv_r],
+                               dtype=np.uint64)
+        self.rp_row = np.array([pow(psi_row, int(b), q) for b in brv_c],
+                               dtype=np.uint64)
+        t2 = np.empty((r, c), dtype=np.uint64)
+        for u in range(r):
+            eu = int(brv_r[u])
+            for c0 in range(c):
+                t2[u, c0] = pow(psi, c0, q) * pow(omega, c0 * eu, q) % q
+        self.t2 = t2
+        self.pre_row_inv = np.array([pow(psi_row, -i, q) for i in range(c)],
+                                    dtype=np.uint64)
+        # fuse T2 and the row pre-twist into one elementwise table
+        self.t2_fused = (t2.astype(object)
+                         * self.pre_row_inv[None, :].astype(object)) % q
+        self.t2_fused = self.t2_fused.astype(np.uint64)
+
+    def output_index_map(self):
+        """k such that out.flatten()[u*C + v] = hat a_k."""
+        r, c = self.r, self.c
+        ks = np.empty(r * c, dtype=np.int64)
+        for u in range(r):
+            for v in range(c):
+                ks[u * c + v] = int(self.brv_r[u]) + r * int(self.brv_c[v])
+        return ks
+
+
+def four_step_ntt_ref(a, tabs: FourStepTables):
+    """Reference four-step negacyclic NTT (kernel ordering). a: (N,) u64."""
+    q = jnp.asarray(np.array([tabs.q], dtype=np.uint64))
+    r, c = tabs.r, tabs.c
+    x = jnp.asarray(a).reshape(r, c).astype(jnp.uint64)
+    # phase 1: column negacyclic NTT (CT includes the twist)
+    xt = x.T.reshape(c, 1, r)                              # columns as rows
+    y = nttm.ntt_forward(xt, jnp.asarray(tabs.rp_col)[None], q)
+    y = y.reshape(c, r).T                                   # (R, C) u slots
+    # phase 2: fused correction + row pre-twist
+    y = ma.mulmod(y, jnp.asarray(tabs.t2_fused), q[:, None][0])
+    # phase 3: row negacyclic NTT (= cyclic DFT thanks to the pre-twist)
+    z = nttm.ntt_forward(y.reshape(r, 1, c), jnp.asarray(tabs.rp_row)[None], q)
+    return z.reshape(r * c)
+
+
+def naive_negacyclic_eval(a: np.ndarray, q: int, psi: int) -> np.ndarray:
+    """hat a_k = sum_j a_j psi^{j(2k+1)} (object ints; small N only)."""
+    n = len(a)
+    out = np.empty(n, dtype=np.uint64)
+    for k in range(n):
+        base = pow(psi, 2 * k + 1, q)
+        acc, p = 0, 1
+        for j in range(n):
+            acc = (acc + int(a[j]) * p) % q
+            p = p * base % q
+        out[k] = acc
+    return out

@@ -1,0 +1,129 @@
+"""Per-(arch x shape) dry-run cell construction: abstract inputs
+(ShapeDtypeStruct — weak-type-correct, shardable, no allocation),
+in/out shardings, and the step function to lower.
+
+Shapes (assignment):
+    train_4k     seq=4096    global_batch=256   train_step
+    prefill_32k  seq=32768   global_batch=32    prefill_step
+    decode_32k   seq=32768   global_batch=128   serve_step (1 new token)
+    long_500k    seq=524288  global_batch=1     serve_step; sub-quadratic
+                 archs only (rwkv6, recurrentgemma) — full-attention archs
+                 skip (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.train.optim import abstract_adamw_state, adamw_state_specs
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def cell_applicable(cfg: ArchConfig, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: O(S^2) at 524288 is out of "
+                       "scope per assignment (sub-quadratic archs only)")
+    return True, ""
+
+
+def _batch_abstract(cfg: ArchConfig, b: int, s: int, with_labels: bool):
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.xattn_period:
+        out["images"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_dec:
+        out["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def _batch_specs(cfg: ArchConfig, batch_abs, mesh: Mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def spec(x):
+        return NamedSharding(mesh, P(dp, *([None] * (len(x.shape) - 1))))
+
+    return jax.tree.map(spec, batch_abs)
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_cell(arch_name: str, shape_name: str, mesh: Mesh,
+               cfg_override=None) -> Dict[str, Any]:
+    """Returns dict(fn, args, in_shardings, out_shardings, meta) ready for
+    jax.jit(fn, in_shardings=..., out_shardings=...).lower(*args).
+    `cfg_override` substitutes a modified ArchConfig (roofline depth knobs)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch_name)
+    sh = SHAPES[shape_name]
+    b, s, kind = sh["batch"], sh["seq"], sh["kind"]
+    ok, why = cell_applicable(cfg, shape_name)
+    if not ok:
+        return {"skip": True, "reason": why, "cfg": cfg}
+
+    params_abs = M.abstract_params(cfg)
+    pspecs = M.param_specs(cfg, mesh)
+    meta = {"arch": cfg.name, "shape": shape_name, "kind": kind,
+            "batch": b, "seq": s}
+
+    if kind == "train":
+        batch_abs = _batch_abstract(cfg, b, s, with_labels=True)
+        opt_abs = abstract_adamw_state(params_abs)
+        ospecs = adamw_state_specs(pspecs, mesh)
+        step = M.make_train_step(cfg, mesh)
+        metric_names = ["ce", "loss", "grad_norm"] + (
+            ["aux"] if cfg.n_experts else []) + (
+            ["mtp_ce"] if cfg.mtp else [])
+        out_shardings = (pspecs, ospecs, {k: _repl(mesh)
+                                          for k in metric_names})
+        return dict(skip=False, fn=step,
+                    args=(params_abs, opt_abs, batch_abs),
+                    in_shardings=(pspecs, ospecs,
+                                  _batch_specs(cfg, batch_abs, mesh)),
+                    out_shardings=out_shardings, meta=meta, cfg=cfg)
+
+    if kind == "prefill":
+        batch_abs = _batch_abstract(cfg, b, s, with_labels=False)
+        step = M.make_prefill_step(cfg, mesh)
+        return dict(skip=False, fn=step, args=(params_abs, batch_abs),
+                    in_shardings=(pspecs, _batch_specs(cfg, batch_abs, mesh)),
+                    out_shardings=None, meta=meta, cfg=cfg)
+
+    # decode — serving rules: TP-only weights (no per-step FSDP gathers)
+    from repro.sharding.rules import serving_rules
+    rules = serving_rules()
+    params_abs = M.abstract_params(cfg)
+    pspecs = M.param_specs(cfg, mesh, rules)
+    cache_abs = M.abstract_cache(cfg, b, s)
+    cspecs = M.cache_specs(cfg, mesh, b, s, rules)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tok_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    dp_n = _axes_prod(mesh, dp)
+    tok_spec = (NamedSharding(mesh, P(dp))
+                if dp and b % dp_n == 0 else _repl(mesh))
+    step = M.make_serve_step(cfg, mesh)
+    return dict(skip=False, fn=step,
+                args=(params_abs, cache_abs, tok_abs, pos_abs),
+                in_shardings=(pspecs, cspecs, tok_spec, _repl(mesh)),
+                out_shardings=(tok_spec, cspecs), meta=meta, cfg=cfg)
+
+
+def _axes_prod(mesh: Mesh, axes) -> int:
+    import numpy as np
+    return int(np.prod([dict(zip(mesh.axis_names,
+                                 mesh.devices.shape))[a] for a in axes]))

@@ -1,0 +1,4 @@
+from repro.models.config import ArchConfig  # noqa: F401
+from repro.models.model import (abstract_params, init_params, logical_axes,
+                                make_prefill_step, make_serve_step,
+                                make_train_step)  # noqa: F401

@@ -1,0 +1,131 @@
+"""Self-attention blocks: GQA (w/ qk-norm, sliding window) and MLA
+(DeepSeek multi-head latent attention), with train/prefill and decode paths.
+
+Decode caches:
+* GQA/local: (k, v) each (B, Hkv, S_max, dh) — standard KV cache.
+* MLA: the compressed latent (B, S_max, kv_lora + qk_rope) — 576 floats per
+  token for deepseek-v3, the arch's signature memory saving.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import (apply_rope, decode_attention,
+                                 flash_attention, rmsnorm, rope_angles)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_forward(x, p, cfg: ArchConfig, positions):
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_angles(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin).transpose(0, 2, 1, 3)
+    k = apply_rope(k, cos, sin).transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    window = cfg.local_window if cfg.attention == "local" else 0
+    o = flash_attention(q, k, v, causal=True, chunk=min(1024, s),
+                        window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), (k, v)
+
+
+def gqa_decode(x, p, cfg: ArchConfig, cache: Tuple, pos):
+    """x: (B, 1, D); cache (k,v): (B, Hkv, S, dh) with `pos` filled."""
+    b = x.shape[0]
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k_cache, v_cache = cache
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    cos, sin = rope_angles(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin).transpose(0, 2, 1, 3)
+    k = apply_rope(k, cos, sin).transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=2)
+    window = cfg.local_window if cfg.attention == "local" else 0
+    o = decode_attention(q, k_cache, v_cache, cur_pos=pos, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(x, p, cfg: ArchConfig, positions):
+    """Project to per-head q (nope+rope) and latent; returns q, latent."""
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    # q: low-rank
+    q_lat = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"],
+                    cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"])       # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_angles(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    # kv latent + shared k_rope
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])           # (B,S,kvl+dr)
+    kv_lat = rmsnorm(kv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank:][..., None, :]       # (B,S,1,dr)
+    k_rope = apply_rope(k_rope, cos, sin)[..., 0, :]        # (B,S,dr)
+    latent = jnp.concatenate([kv_lat, k_rope], axis=-1)
+    return jnp.concatenate([q_nope, q_rope], axis=-1), latent
+
+
+def _mla_attend(q, latent, p, cfg: ArchConfig, cur_pos=None):
+    """q (B,Sq,H,dn+dr); latent (B,Skv,kvl+dr) -> (B,Sq,H*dv)."""
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    kv_lat, k_rope = latent[..., :kvl], latent[..., kvl:]
+    kvb = p["wkv_b"].reshape(kvl, h, dn + dv)
+    k_nope = jnp.einsum("bsr,rhk->bshk", kv_lat, kvb[..., :dn])
+    v = jnp.einsum("bsr,rhk->bshk", kv_lat, kvb[..., dn:])
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (h, dr))
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    sq = q.shape[1]
+    if sq == 1:
+        o = decode_attention(qh, kh, vh, cur_pos=cur_pos)
+    else:
+        o = flash_attention(qh, kh, vh, causal=True, chunk=min(1024, sq))
+    b = q.shape[0]
+    return o.transpose(0, 2, 1, 3).reshape(b, sq, h * dv)
+
+
+def mla_forward(x, p, cfg: ArchConfig, positions):
+    q, latent = _mla_qkv(x, p, cfg, positions)
+    o = _mla_attend(q, latent, p, cfg)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), latent
+
+
+def mla_decode(x, p, cfg: ArchConfig, latent_cache, pos):
+    """latent_cache: (B, S_max, kv_lora+qk_rope)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, latent = _mla_qkv(x, p, cfg, positions)
+    latent_cache = jax.lax.dynamic_update_slice_in_dim(
+        latent_cache, latent, pos, axis=1)
+    o = _mla_attend(q, latent_cache, p, cfg, cur_pos=pos)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), latent_cache

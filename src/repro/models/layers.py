@@ -1,0 +1,176 @@
+"""Shared neural layers: norms, RoPE, SwiGLU MLP, flash-style attention
+(chunked, causal/local/cross), GQA/MLA, decode-with-cache paths.
+
+All functions are dtype-explicit (bf16 compute, f32 norms/softmax
+accumulators) so the FHE core's global x64 flag never changes LM numerics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+F32 = jnp.float32
+
+
+def rmsnorm(x, w, eps=1e-6):
+    xf = x.astype(F32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(F32)).astype(x.dtype)
+
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions: (..., S) int32 -> (cos, sin) of shape (..., S, dim//2)."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) / half))
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, d). cos/sin: (..., S, d//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(F32)
+    s = sin[..., None, :].astype(F32)
+    x1f, x2f = x1.astype(F32), x2.astype(F32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s],
+                           axis=-1).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention — memory-sane at 32k+ sequence
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+# roofline driver sets this True to unroll the kv-chunk loop (see
+# models/model.py SCAN_UNROLL); FLASH_CHUNK overrides the chunk size
+# (larger chunk = fewer unrolled iterations = smaller HLO)
+FLASH_UNROLL = False
+FLASH_CHUNK = 0
+
+
+def _attend_chunk(q, k, v, mask, scale):
+    """q (B,G,Hg,Sq,d) k/v (B,G,Skv,d) mask (Sq,Skv) -> partial softmax stats."""
+    s = jnp.einsum("bghqd,bgkd->bghqk", q, k).astype(F32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, -1e29)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bghqk,bgkd->bghqd", p.astype(v.dtype), v).astype(F32)
+    return m, l, o
+
+
+def flash_attention(q, k, v, *, causal: bool, chunk: int = 1024,
+                    window: int = 0):
+    """Chunked softmax attention with running max/denominator.
+
+    q: (B, Hq, Sq, d); k, v: (B, Hkv, Skv, d); GQA via head groups.
+    window > 0 limits attention to the last `window` positions (exact
+    sliding window). Assumes Sq == Skv when causal (training/prefill).
+    """
+    b, hq, sq, d = q.shape
+    dv = v.shape[-1]
+    hkv = k.shape[1]
+    g = hkv
+    hg = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, g, hg, sq, d)
+    skv = k.shape[2]
+    if FLASH_CHUNK:
+        chunk = FLASH_CHUNK
+    chunk = min(chunk, skv)
+    n_chunks = skv // chunk
+    assert skv % chunk == 0, (skv, chunk)
+    kc = k.reshape(b, g, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, g, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+
+    q_pos = jnp.arange(sq)
+
+    def body(carry, inp):
+        m_run, l_run, o_run = carry
+        ci, kb, vb = inp
+        kv_pos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window:
+            mask &= q_pos[:, None] - kv_pos[None, :] < window
+        m_c, l_c, o_c = _attend_chunk(qg, kb, vb, mask, scale)
+        m_new = jnp.maximum(m_run, m_c)
+        a1 = jnp.exp(m_run - m_new)
+        a2 = jnp.exp(m_c - m_new)
+        l_new = l_run * a1 + l_c * a2
+        o_new = o_run * a1 + o_c * a2
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, g, hg, sq, 1), NEG_INF, dtype=F32)
+    l0 = jnp.zeros((b, g, hg, sq, 1), dtype=F32)
+    o0 = jnp.zeros((b, g, hg, sq, dv), dtype=F32)
+    (m_f, l_f, o_f), _ = jax.lax.scan(
+        body, (m0, l0, o0), (jnp.arange(n_chunks), kc, vc),
+        unroll=True if FLASH_UNROLL else 1)
+    out = (o_f / jnp.maximum(l_f, 1e-30)).astype(q.dtype)
+    return out.reshape(b, hq, sq, dv)
+
+
+def decode_attention(q, k_cache, v_cache, cur_pos=None, window: int = 0):
+    """Single-token decode: q (B,Hq,1,d) over cache (B,Hkv,S,d).
+
+    `cur_pos` (scalar) masks cache slots beyond the current position;
+    `window` restricts to the trailing sliding window.
+    """
+    b, hq, _, d = q.shape
+    hkv = k_cache.shape[1]
+    g, hg = hkv, hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, g, hg, 1, d)
+    s = jnp.einsum("bghqd,bgkd->bghqk", qg, k_cache).astype(F32) * scale
+    skv = k_cache.shape[2]
+    pos = jnp.arange(skv)
+    if cur_pos is not None:
+        s = jnp.where(pos <= cur_pos, s, NEG_INF)
+        if window:
+            s = jnp.where(cur_pos - pos < window, s, NEG_INF)
+    elif window:
+        s = jnp.where((skv - 1 - pos) < window, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bghqk,bgkd->bghqd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, hq, 1, v_cache.shape[-1])
+
+
+def _divisor_chunk(skv: int, target: int = 1024) -> int:
+    """Largest chunk <= target dividing skv (whole skv if none, e.g. 1601)."""
+    for c in range(min(target, skv), 0, -1):
+        if skv % c == 0:
+            return c
+    return skv
+
+
+def cross_attention(x, memory, p, cfg: ArchConfig):
+    """Non-causal attention from x to `memory` (vision/audio/encoder)."""
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.resolved_head_dim
+    hkv = max(cfg.n_kv_heads, 1)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).transpose(0, 2, 1, 3)
+    kx = jnp.einsum("bsd,dhk->bshk", memory, p["wk"]).transpose(0, 2, 1, 3)
+    vx = jnp.einsum("bsd,dhk->bshk", memory, p["wv"]).transpose(0, 2, 1, 3)
+    o = flash_attention(q, kx, vx, causal=False,
+                        chunk=_divisor_chunk(memory.shape[1]))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"])

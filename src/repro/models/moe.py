@@ -1,0 +1,136 @@
+"""Token-choice top-k Mixture of Experts with expert parallelism.
+
+Two dispatch schedules (the FHE analogy is direct — BConv's all-to-all over
+limb-sharded banks maps to token dispatch over expert-sharded devices, and
+the same chain-vs-channel tradeoff from paper §III-C appears here):
+
+* `moe_psum` (baseline, works for any token count incl. decode): tokens are
+  replicated across the `model` axis; each model-rank computes only its
+  local experts and the partial outputs are psum-reduced. Communication =
+  one all-reduce of the full activation.
+* `moe_all_to_all` (optimized, training/prefill): tokens are also split
+  along `model`; each device dispatches its local tokens into a per-expert
+  buffer and a single all_to_all moves token-slots to the experts' owners.
+  Communication = only the dispatched slice (k/E' of the activations).
+
+Both use capacity-based dispatch (capacity_factor, overflow dropped — the
+standard token-choice contract) built from sort-free cumsum ranking and
+mode='drop' scatters, so everything jits with static shapes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+F32 = jnp.float32
+
+
+def router(x, w_router, top_k: int):
+    """x (T, D) -> (weights (T,k), ids (T,k), aux_loss scalar, probs (T,E))."""
+    logits = jnp.einsum("td,de->te", x, w_router).astype(F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * P_e
+    e = probs.shape[-1]
+    density = jnp.zeros((e,), F32).at[ids.reshape(-1)].add(1.0)
+    density = density / ids.size
+    p_mean = probs.mean(0)
+    aux = e * jnp.sum(density * p_mean)
+    return weights.astype(x.dtype), ids, aux, probs
+
+
+def _dispatch_indices(ids, e_total: int, capacity: int):
+    """Rank each (token, k-slot) within its expert. Returns flat positions
+    (T*k,) in [0, capacity) and a keep mask (overflow dropped)."""
+    flat = ids.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(flat, e_total, dtype=jnp.int32)  # (T*k, E)
+    ranks = jnp.cumsum(onehot, axis=0) - 1                   # rank within expert
+    pos = jnp.take_along_axis(ranks, flat[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    return pos, keep
+
+
+def expert_ffn(buf, w_gate, w_up, w_down):
+    """buf (E_l, C, D) x per-expert weights (E_l, D, F)."""
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    h = jax.nn.silu(g.astype(F32)).astype(buf.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def moe_psum(x, p, cfg: ArchConfig, mesh_axis: str = "model"):
+    """shard_map body — x (T_local, D) identical across `mesh_axis` ranks;
+    expert weights sharded: p['w_gate'] (E_local, D, F) etc."""
+    t, d = x.shape
+    e_total = cfg.n_experts
+    e_local = p["w_gate"].shape[0]
+    n_ranks = e_total // e_local
+    my_rank = jax.lax.axis_index(mesh_axis)
+    weights, ids, aux, _ = router(x, p["w_router"], cfg.top_k)
+    capacity = max(int(t * cfg.top_k * cfg.capacity_factor / e_total), 4)
+    pos, keep = _dispatch_indices(ids, e_total, capacity)
+    flat_ids = ids.reshape(-1)
+    local_e = flat_ids - my_rank * e_local
+    mine = keep & (local_e >= 0) & (local_e < e_local)
+    # scatter tokens into my experts' buffers
+    xk = jnp.repeat(x, cfg.top_k, axis=0)                    # (T*k, D)
+    buf = jnp.zeros((e_local, capacity, d), x.dtype)
+    idx_e = jnp.where(mine, local_e, e_local)                # OOB -> dropped
+    buf = buf.at[idx_e, pos].set(xk, mode="drop")
+    out_buf = expert_ffn(buf, p["w_gate"], p["w_up"], p["w_down"])
+    # gather back + weighted combine
+    gathered = out_buf.at[idx_e, pos].get(mode="fill", fill_value=0)
+    gathered = jnp.where(mine[:, None], gathered, 0)
+    combined = (gathered.reshape(t, cfg.top_k, d)
+                * weights[..., None]).sum(axis=1)
+    combined = jax.lax.psum(combined, mesh_axis)
+    return combined.astype(x.dtype), aux
+
+
+def moe_all_to_all(x, p, cfg: ArchConfig, mesh_axis: str = "model"):
+    """shard_map body — x (T_local, D) DISTINCT per rank (tokens split over
+    `mesh_axis` too). Dispatch buffers are exchanged with one all_to_all,
+    experts run on their owners, and a reverse all_to_all returns outputs."""
+    t, d = x.shape
+    e_total = cfg.n_experts
+    e_local = p["w_gate"].shape[0]
+    n_ranks = e_total // e_local
+    weights, ids, aux, _ = router(x, p["w_router"], cfg.top_k)
+    capacity = max(int(t * cfg.top_k * cfg.capacity_factor / e_total), 4)
+    pos, keep = _dispatch_indices(ids, e_total, capacity)
+    flat_ids = ids.reshape(-1)
+    xk = jnp.repeat(x, cfg.top_k, axis=0)
+    buf = jnp.zeros((e_total, capacity, d), x.dtype)
+    idx_e = jnp.where(keep, flat_ids, e_total)
+    buf = buf.at[idx_e, pos].set(xk, mode="drop")
+    # (E, C, D) -> split E across ranks -> (E_local, n_ranks*C, D)
+    buf = jax.lax.all_to_all(buf, mesh_axis, split_axis=0, concat_axis=1,
+                             tiled=True)
+    out_buf = expert_ffn(buf, p["w_gate"], p["w_up"], p["w_down"])
+    out_buf = jax.lax.all_to_all(out_buf, mesh_axis, split_axis=1,
+                                 concat_axis=0, tiled=True)
+    gathered = out_buf.at[idx_e, pos].get(mode="fill", fill_value=0)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    combined = (gathered.reshape(t, cfg.top_k, d)
+                * weights[..., None]).sum(axis=1)
+    return combined.astype(x.dtype), aux
+
+
+def moe_reference(x, p_full, cfg: ArchConfig):
+    """Single-device oracle: dense per-expert compute, no capacity drops.
+    Used by tests to validate the distributed dispatch paths."""
+    t, d = x.shape
+    weights, ids, aux, _ = router(x, p_full["w_router"], cfg.top_k)
+    outs = expert_ffn(jnp.broadcast_to(x, (cfg.n_experts, t, d)),
+                      p_full["w_gate"], p_full["w_up"], p_full["w_down"])
+    # outs (E, T, D); combine top-k
+    sel = outs[ids.reshape(-1), jnp.repeat(jnp.arange(t), cfg.top_k)]
+    combined = (sel.reshape(t, cfg.top_k, d) * weights[..., None]).sum(1)
+    return combined.astype(x.dtype), aux

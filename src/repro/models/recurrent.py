@@ -1,0 +1,158 @@
+"""Recurrent sequence mixers: RWKV6 (Finch) time-mix and RG-LRU
+(RecurrentGemma), with scan-based training and O(1)-state decode.
+
+These are the sub-quadratic archs that make the long_500k cell meaningful:
+state size is independent of context length (RWKV: (H, dh, dh) matrix
+state; RG-LRU: (width,) diagonal state + a `local_window` KV cache for the
+hybrid's attention layers).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+F32 = jnp.float32
+RWKV_HEAD_DIM = 64
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix (data-dependent decay — the Finch headline feature)
+# ---------------------------------------------------------------------------
+
+def _token_shift(x, last=None):
+    """Shift sequence right by one; `last` supplies x_{-1} for decode."""
+    if last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = last[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(x, p, cfg: ArchConfig, state=None, x_last=None):
+    """x: (B, T, D). state: (B, H, dh, dh) or None (zeros).
+
+    Returns (out, (new_state, new_x_last)).
+    """
+    b, t, d = x.shape
+    dh = RWKV_HEAD_DIM
+    h = d // dh
+    xs = _token_shift(x, x_last)
+    def lerp(mu):
+        return x + (xs - x) * mu
+    r = jnp.einsum("btd,de->bte", lerp(p["mu_r"]), p["wr"])
+    k = jnp.einsum("btd,de->bte", lerp(p["mu_k"]), p["wk"])
+    v = jnp.einsum("btd,de->bte", lerp(p["mu_v"]), p["wv"])
+    g = jnp.einsum("btd,de->bte", lerp(p["mu_g"]), p["wg"])
+    # data-dependent decay (LoRA): w = exp(-exp(w0 + tanh(xw A) B))
+    xw = lerp(p["mu_w"])
+    dd = jnp.einsum("btr,rd->btd", jnp.tanh(
+        jnp.einsum("btd,dr->btr", xw, p["w_lora_a"])), p["w_lora_b"])
+    w = jnp.exp(-jnp.exp((p["w0"] + dd).astype(F32)))        # (B,T,D) in (0,1)
+
+    rh = r.reshape(b, t, h, dh)
+    kh = k.reshape(b, t, h, dh)
+    vh = v.reshape(b, t, h, dh)
+    wh = w.reshape(b, t, h, dh)
+    u = p["u_bonus"].reshape(h, dh)
+
+    if state is None:
+        state = jnp.zeros((b, h, dh, dh), F32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                  # (B,H,dh)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(F32), vt.astype(F32))
+        out = jnp.einsum("bhk,bhkv->bhv", rt.astype(F32),
+                         s + u[None, :, :, None] * kv)
+        s = s * wt.astype(F32)[..., None] + kv
+        return s, out
+
+    xs_seq = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+              vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+    new_state, outs = jax.lax.scan(step, state, xs_seq)
+    out = outs.transpose(1, 0, 2, 3).reshape(b, t, d)
+    out = _groupnorm(out, p["ln_x_w"], h)
+    out = out * jax.nn.silu(g.astype(F32)).astype(out.dtype)
+    out = jnp.einsum("btd,de->bte", out.astype(x.dtype), p["wo"])
+    return out, (new_state, x[:, -1])
+
+
+def _groupnorm(x, w, groups):
+    b, t, d = x.shape
+    xf = x.astype(F32).reshape(b, t, groups, d // groups)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, t, d)
+    return (y * w.astype(F32)).astype(x.dtype)
+
+
+def rwkv_channel_mix(x, p, cfg: ArchConfig, x_last=None):
+    xs = _token_shift(x, x_last)
+    xk = x + (xs - x) * p["mu_ck"]
+    xr = x + (xs - x) * p["mu_cr"]
+    k = jnp.einsum("btd,df->btf", xk, p["w_key"])
+    k = jnp.square(jax.nn.relu(k.astype(F32))).astype(x.dtype)
+    kv = jnp.einsum("btf,fd->btd", k, p["w_value"])
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["w_recept"]).astype(F32))
+    return (r.astype(x.dtype) * kv), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma) + temporal conv
+# ---------------------------------------------------------------------------
+
+def _causal_conv1d(x, w, state=None):
+    """Depthwise causal conv. x (B,T,W), w (K,W). state: (B,K-1,W) history."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out, xp[:, -(k - 1):]
+
+
+def rglru(x, p, state=None):
+    """RG-LRU recurrence. x (B,T,W) -> same; state (B,W) diagonal."""
+    b, t, w_dim = x.shape
+    rgate = jax.nn.sigmoid(
+        jnp.einsum("btw,w->btw", x.astype(F32), p["w_a"].astype(F32))
+        + p["b_a"].astype(F32))
+    igate = jax.nn.sigmoid(
+        jnp.einsum("btw,w->btw", x.astype(F32), p["w_x"].astype(F32))
+        + p["b_x"].astype(F32))
+    log_a = -8.0 * rgate * jax.nn.softplus(p["lambda_p"].astype(F32))
+    a = jnp.exp(log_a)                                        # (B,T,W)
+    gated_x = x.astype(F32) * igate
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+    if state is None:
+        state = jnp.zeros((b, w_dim), F32)
+
+    def step(h, inp):
+        at, xt, mt = inp
+        h = at * h + mt * xt
+        return h, h
+
+    seq = (a.transpose(1, 0, 2), gated_x.transpose(1, 0, 2),
+           multiplier.transpose(1, 0, 2))
+    new_state, hs = jax.lax.scan(step, state, seq)
+    return hs.transpose(1, 0, 2).astype(x.dtype), new_state
+
+
+def rglru_block(x, p, cfg: ArchConfig, state=None):
+    """RecurrentGemma recurrent block:
+    x -> [linear -> conv1d -> RG-LRU] * gelu(linear(x)) -> linear out.
+    state = (conv_state, lru_state)."""
+    conv_state, lru_state = state if state is not None else (None, None)
+    y = jnp.einsum("btd,dw->btw", x, p["w_in_y"])
+    gate = jax.nn.gelu(
+        jnp.einsum("btd,dw->btw", x, p["w_in_g"]).astype(F32)).astype(x.dtype)
+    y, new_conv = _causal_conv1d(y, p["conv_w"], conv_state)
+    y, new_lru = rglru(y, p, lru_state)
+    out = jnp.einsum("btw,wd->btd", y * gate, p["w_out"])
+    return out, (new_conv, new_lru)

@@ -1,0 +1,2 @@
+from repro.sharding.rules import (LogicalAxisRules, default_rules,
+                                  spec_for_shape, tree_specs)  # noqa: F401

@@ -1,0 +1,138 @@
+"""Logical-axis sharding rules (MaxText-style), with divisibility-aware
+greedy resolution.
+
+Every parameter/activation carries a tuple of *logical* axis names; rules
+map each logical name to an ordered preference list of mesh axes. Spec
+resolution walks dims in a global priority order, assigning the first mesh
+axis that (a) is not already used by another dim of the same tensor and
+(b) divides the dim size. Non-divisible or exhausted dims replicate.
+
+This is what lets one model zoo serve meshes (16,16) and (2,16,16) and
+archs whose head counts (56, 10, 1...) don't always divide the model axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+MeshAxes = Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class LogicalAxisRules:
+    # logical name -> ordered mesh-axis preference (each entry is a mesh axis
+    # name or a tuple of axes to use jointly)
+    rules: Dict[str, List[object]]
+    # resolution priority: earlier names grab mesh axes first
+    priority: List[str]
+
+    def axis_prefs(self, name: str) -> List[object]:
+        return self.rules.get(name, [])
+
+
+def default_rules(head_dim_fallback: bool = False) -> LogicalAxisRules:
+    """head_dim_fallback: shard head_dim over `model` when head counts
+    don't divide it. MEASURED HARMFUL (EXPERIMENTS.md §Perf iteration 1):
+    XLA SPMD cannot propagate head_dim-sharded attention cleanly and falls
+    back to full rematerialization copies — arctic-480b prefill collective
+    term 378s -> 3.8s (99x) with replicated heads. Default off."""
+    return LogicalAxisRules(
+        rules={
+            "batch": [("pod", "data"), "data"],
+            "experts": ["model"],
+            "heads": ["model"],
+            "kv_heads": ["model"],
+            "vocab": ["model"],
+            "mlp": ["model"],
+            "q_lora": ["model"],
+            "kv_lora": ["model"],
+            "head_dim": (["model"] if head_dim_fallback else []),
+            "embed": ["data"],          # FSDP axis for weights
+            "embed_repl": [],
+            "seq": [],                  # sequence kept unsharded by default
+            "layers": [],
+            "conv": [],
+            "state": [],
+        },
+        priority=["experts", "heads", "kv_heads", "vocab", "mlp", "q_lora",
+                  "kv_lora", "batch", "head_dim", "embed", "seq"],
+    )
+
+
+def _axes_of(entry) -> Tuple[str, ...]:
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def spec_for_shape(mesh: Mesh, logical: Sequence[Optional[str]],
+                   shape: Sequence[int],
+                   rules: Optional[LogicalAxisRules] = None) -> P:
+    """Resolve a PartitionSpec for one tensor."""
+    rules = rules or default_rules()
+    mesh_sizes = dict(mesh.shape)  # works for Mesh and AbstractMesh
+    n = len(shape)
+    assert len(logical) == n, (logical, shape)
+    assignment: List[Optional[object]] = [None] * n
+    used: set = set()
+    order = sorted(
+        range(n),
+        key=lambda i: (rules.priority.index(logical[i])
+                       if logical[i] in rules.priority else len(rules.priority)))
+    for i in order:
+        name = logical[i]
+        if name is None:
+            continue
+        for pref in rules.axis_prefs(name):
+            axes = _axes_of(pref)
+            if any(a not in mesh_sizes for a in axes):
+                continue
+            if any(a in used for a in axes):
+                continue
+            total = 1
+            for a in axes:
+                total *= mesh_sizes[a]
+            if shape[i] % total != 0:
+                continue
+            assignment[i] = pref
+            used.update(axes)
+            break
+    return P(*assignment)
+
+
+def tree_specs(mesh: Mesh, params_logical, params_shapes,
+               rules: Optional[LogicalAxisRules] = None):
+    """Map matching pytrees of logical-axis tuples and shapes -> NamedShardings."""
+    rules = rules or default_rules()
+
+    def one(logical, shape):
+        return NamedSharding(mesh, spec_for_shape(mesh, logical, shape, rules))
+
+    return jax.tree.map(one, params_logical, params_shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def serving_rules(replicate_weights_over_data: bool = False,
+                  shard_cache_seq: bool = True) -> LogicalAxisRules:
+    """Decode-path rules (EXPERIMENTS.md §Perf iterations 2/2b).
+
+    Iteration 2 (REFUTED): replicating weights over `data` to avoid
+    per-step FSDP gathers made qwen3 decode WORSE (coll 0.68s -> 1.55s;
+    all-gather 32 -> 74 GiB): the decode collective term is dominated by
+    KV-CACHE all-gathers (kv_heads=8 < model=16 leaves the cache
+    model-replicated and SPMD re-gathers it around the per-step update),
+    not by weight gathers.
+
+    Iteration 2b (CONFIRMED): shard the cache SEQUENCE dim over `model`
+    (context-parallel decode attention; the S-contraction becomes a psum).
+    """
+    r = default_rules()
+    rules = dict(r.rules)
+    if replicate_weights_over_data:
+        rules["embed"] = []
+    if shard_cache_seq:
+        rules["seq"] = ["model"]
+    return LogicalAxisRules(rules=rules, priority=r.priority)

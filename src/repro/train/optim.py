@@ -1,0 +1,80 @@
+"""AdamW with pytree states. Optimizer states inherit the parameters'
+shardings (FSDP'd params => ZeRO-sharded optimizer states for free)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def adamw_init(params):
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_adamw_state(params_abstract):
+    return {
+        "m": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, F32),
+                          params_abstract),
+        "v": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, F32),
+                          params_abstract),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def adamw_state_specs(param_specs, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(params, grads, state, lr: float = 3e-4, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8, wd: float = 0.1):
+    step = state["step"] + 1
+    t = step.astype(F32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(F32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        pf = p.astype(F32) - lr * (update + wd * pf_wd(p))
+        return pf.astype(p.dtype), m, v
+
+    def pf_wd(p):
+        # no weight decay on 1-D (norm/bias) params
+        return p.astype(F32) if p.ndim > 1 else jnp.zeros_like(p, F32)
+
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, c = upd(p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    return (jax.tree.unflatten(td, new_p),
+            {"m": jax.tree.unflatten(td, new_m),
+             "v": jax.tree.unflatten(td, new_v),
+             "step": step})

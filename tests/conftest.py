@@ -1,0 +1,43 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and benches
+# must see the single real CPU device; only launch/dryrun.py forces 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def ckks_small():
+    """Shared small CKKS stack (log_n=8) for fast tests."""
+    from repro.core.params import test_params
+    from repro.core.context import CkksContext
+    from repro.core.encoder import CkksEncoder
+    from repro.core.encryptor import CkksEncryptor
+
+    params = test_params(log_n=8, n_levels=4, dnum=2, log_scale=26)
+    ctx = CkksContext(params)
+    return {
+        "params": params,
+        "ctx": ctx,
+        "encoder": CkksEncoder(ctx),
+        "encryptor": CkksEncryptor(ctx, seed=7),
+    }
+
+
+@pytest.fixture(scope="session")
+def ckks_keys(ckks_small):
+    enc = ckks_small["encryptor"]
+    sk = enc.keygen()
+    return {
+        "sk": sk,
+        "pk": enc.public_keygen(sk),
+        "rk": enc.relin_keygen(sk),
+    }
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(1234)

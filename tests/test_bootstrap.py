@@ -1,0 +1,67 @@
+"""End-to-end CKKS bootstrapping (the paper's flagship deep workload)."""
+import numpy as np
+import pytest
+
+from repro.core.params import CkksParams
+from repro.core.context import CkksContext
+from repro.core.encoder import CkksEncoder
+from repro.core.encryptor import CkksEncryptor
+from repro.core.ciphertext import Plaintext
+from repro.core.bootstrap import Bootstrapper, BootstrapConfig
+
+
+@pytest.fixture(scope="module")
+def boot_stack():
+    params = CkksParams(log_n=7, log_scale=25, n_levels=16, dnum=2,
+                        first_mod_bits=29, scale_mod_bits=25,
+                        special_mod_bits=29, hamming_weight_sk=16)
+    ctx = CkksContext(params)
+    enc = CkksEncoder(ctx)
+    encr = CkksEncryptor(ctx, seed=11)
+    sk = encr.keygen()
+    bts = Bootstrapper(ctx, enc, encr, sk,
+                       BootstrapConfig(eval_mod_degree=63, k_range=6.0))
+    return params, ctx, enc, encr, sk, bts
+
+
+def test_mod_raise_preserves_message(boot_stack):
+    params, ctx, enc, encr, sk, bts = boot_stack
+    rng = np.random.default_rng(0)
+    s = ctx.n // 2
+    v = 0.3 * (rng.normal(size=s) + 1j * rng.normal(size=s))
+    scale = 2.0 ** 25
+    ct = encr.encrypt_sk(Plaintext(enc.encode(v, scale, 0), 0, scale), sk)
+    raised = bts.mod_raise(ct, 6)
+    # message becomes m + q0*I: in slot space that's v + (q0/scale)*tau(I);
+    # verify the m part survives by checking the value mod-q0 structure via
+    # a full bootstrap below; here check shape/level bookkeeping.
+    assert raised.level == 6 and raised.data.shape[1] == 7
+
+
+def test_cts_stc_roundtrip(boot_stack):
+    """CoefToSlot then SlotToCoef ~ identity (on a fresh high-level ct)."""
+    params, ctx, enc, encr, sk, bts = boot_stack
+    rng = np.random.default_rng(1)
+    s = ctx.n // 2
+    v = 0.3 * (rng.normal(size=s) + 1j * rng.normal(size=s))
+    scale = 2.0 ** 25
+    L = params.n_levels
+    ct = encr.encrypt_sk(Plaintext(enc.encode(v, scale, L), L, scale), sk)
+    z = bts.coef_to_slot(ct)
+    back = bts.slot_to_coef(z)
+    got = enc.decode(encr.decrypt(back, sk).data, back.scale, back.level)
+    np.testing.assert_allclose(got, v, atol=2e-2)
+
+
+def test_full_bootstrap(boot_stack):
+    params, ctx, enc, encr, sk, bts = boot_stack
+    rng = np.random.default_rng(2)
+    s = ctx.n // 2
+    v = 0.3 * (rng.normal(size=s) + 1j * rng.normal(size=s))
+    scale = 2.0 ** 25
+    ct0 = encr.encrypt_sk(Plaintext(enc.encode(v, scale, 0), 0, scale), sk)
+    out = bts.bootstrap(ct0, params.n_levels)
+    assert out.level >= 2, "bootstrap must return usable levels"
+    got = enc.decode(encr.decrypt(out, sk).data, out.scale, out.level)
+    err = np.abs(got - v).max()
+    assert err < 0.05, f"bootstrap error too large: {err}"

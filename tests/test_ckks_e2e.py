@@ -1,0 +1,186 @@
+"""End-to-end CKKS behaviour: the system-level semantics FHEmem accelerates.
+
+Validates the paper's §II-A primitives against plaintext arithmetic:
+encrypt/decrypt, HAdd, HMul(+relin+rescale), deep chains, rotation (Galois
+automorphism + key switch), conjugation, plaintext ops, BConv exactness.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import ops, rns
+from repro.core.ciphertext import Plaintext
+
+
+SCALE_BITS = 26
+
+
+def _enc(stack, keys, v, level=None):
+    ctx, enc, encr = stack["ctx"], stack["encoder"], stack["encryptor"]
+    level = stack["params"].n_levels if level is None else level
+    scale = 2.0 ** SCALE_BITS
+    pt = Plaintext(enc.encode(v, scale, level), level, scale)
+    return encr.encrypt_sk(pt, keys["sk"])
+
+
+def _dec(stack, keys, ct):
+    enc, encr = stack["encoder"], stack["encryptor"]
+    return enc.decode(encr.decrypt(ct, keys["sk"]).data, ct.scale, ct.level)
+
+
+def _rand_slots(rng, ctx, scale=1.0):
+    s = ctx.n // 2
+    return scale * (rng.normal(size=s) + 1j * rng.normal(size=s))
+
+
+def test_encrypt_decrypt(ckks_small, ckks_keys, rng):
+    v = _rand_slots(rng, ckks_small["ctx"])
+    ct = _enc(ckks_small, ckks_keys, v)
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, ct), v, atol=1e-3)
+
+
+def test_public_key_encrypt(ckks_small, ckks_keys, rng):
+    stack, keys = ckks_small, ckks_keys
+    v = _rand_slots(rng, stack["ctx"])
+    scale = 2.0 ** SCALE_BITS
+    L = stack["params"].n_levels
+    pt = Plaintext(stack["encoder"].encode(v, scale, L), L, scale)
+    ct = stack["encryptor"].encrypt_pk(pt, keys["pk"])
+    np.testing.assert_allclose(_dec(stack, keys, ct), v, atol=5e-3)
+
+
+def test_hadd_hsub_hneg(ckks_small, ckks_keys, rng):
+    ctx = ckks_small["ctx"]
+    v1, v2 = _rand_slots(rng, ctx), _rand_slots(rng, ctx)
+    ct1, ct2 = (_enc(ckks_small, ckks_keys, v) for v in (v1, v2))
+    np.testing.assert_allclose(
+        _dec(ckks_small, ckks_keys, ops.hadd(ctx, ct1, ct2)), v1 + v2, atol=1e-3)
+    np.testing.assert_allclose(
+        _dec(ckks_small, ckks_keys, ops.hsub(ctx, ct1, ct2)), v1 - v2, atol=1e-3)
+    np.testing.assert_allclose(
+        _dec(ckks_small, ckks_keys, ops.hneg(ctx, ct1)), -v1, atol=1e-3)
+
+
+def test_hmul_relin_rescale(ckks_small, ckks_keys, rng):
+    ctx = ckks_small["ctx"]
+    v1, v2 = _rand_slots(rng, ctx), _rand_slots(rng, ctx)
+    ct1, ct2 = (_enc(ckks_small, ckks_keys, v) for v in (v1, v2))
+    out = ops.hmul(ctx, ct1, ct2, ckks_keys["rk"])
+    assert out.level == ct1.level - 1
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, out), v1 * v2,
+                               atol=5e-3)
+
+
+def test_hsquare(ckks_small, ckks_keys, rng):
+    ctx = ckks_small["ctx"]
+    v = _rand_slots(rng, ctx)
+    ct = _enc(ckks_small, ckks_keys, v)
+    out = ops.hsquare(ctx, ct, ckks_keys["rk"])
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, out), v * v,
+                               atol=5e-3)
+
+
+def test_deep_mul_chain_full_depth(ckks_small, ckks_keys, rng):
+    # |v|<=~0.7 so the depth-4 product stays well under q0/(2*scale) headroom
+    ctx = ckks_small["ctx"]
+    v1, v2 = _rand_slots(rng, ctx, 0.5), _rand_slots(rng, ctx, 0.5)
+    ct1, ct2 = (_enc(ckks_small, ckks_keys, v) for v in (v1, v2))
+    cur, want = ct1, v1.copy()
+    for i in range(ckks_small["params"].n_levels):
+        other = ct2 if i % 2 == 0 else ct1
+        cur = ops.hmul(ctx, cur, other, ckks_keys["rk"])
+        want = want * (v2 if i % 2 == 0 else v1)
+    assert cur.level == 0
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, cur), want, atol=0.2)
+
+
+@pytest.mark.parametrize("step", [1, 2, 7, -1])
+def test_rotation(ckks_small, ckks_keys, rng, step):
+    ctx = ckks_small["ctx"]
+    encr = ckks_small["encryptor"]
+    v = _rand_slots(rng, ctx)
+    ct = _enc(ckks_small, ckks_keys, v)
+    gks = encr.rotation_keygen(ckks_keys["sk"], [step])
+    elt = ctx.rotation_element(step)
+    out = ops.rotate(ctx, ct, step, gks[elt])
+    # Rotate(step): output slot i holds input slot i+step (left rotation)
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, out),
+                               np.roll(v, -step), atol=5e-3)
+
+
+def test_rotation_coeff_domain_matches_eval_domain(ckks_small, ckks_keys, rng):
+    """Paper-faithful (coeff-domain §IV-E) vs optimized (eval-domain) path."""
+    ctx = ckks_small["ctx"]
+    encr = ckks_small["encryptor"]
+    v = _rand_slots(rng, ctx)
+    ct = _enc(ckks_small, ckks_keys, v)
+    gks = encr.rotation_keygen(ckks_keys["sk"], [3])
+    elt = ctx.rotation_element(3)
+    a = ops.rotate(ctx, ct, 3, gks[elt])
+    b = ops.rotate_coeff_domain(ctx, ct, 3, gks[elt])
+    assert (np.asarray(a.data) == np.asarray(b.data)).all()
+
+
+def test_conjugate(ckks_small, ckks_keys, rng):
+    ctx = ckks_small["ctx"]
+    encr = ckks_small["encryptor"]
+    v = _rand_slots(rng, ctx)
+    ct = _enc(ckks_small, ckks_keys, v)
+    gk = encr.galois_keygen(ckks_keys["sk"], [ctx.conj_element])
+    out = ops.conjugate(ctx, ct, gk[ctx.conj_element])
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, out), np.conj(v),
+                               atol=5e-3)
+
+
+def test_plaintext_ops(ckks_small, ckks_keys, rng):
+    ctx, enc = ckks_small["ctx"], ckks_small["encoder"]
+    v1, v2 = _rand_slots(rng, ctx), _rand_slots(rng, ctx)
+    ct = _enc(ckks_small, ckks_keys, v1)
+    scale = 2.0 ** SCALE_BITS
+    pt = Plaintext(enc.encode(v2, scale, ct.level), ct.level, scale)
+    np.testing.assert_allclose(
+        _dec(ckks_small, ckks_keys, ops.padd(ctx, ct, pt)), v1 + v2, atol=1e-3)
+    out = ops.pmul(ctx, ct, pt)
+    assert out.level == ct.level - 1
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, out), v1 * v2,
+                               atol=5e-3)
+    out3 = ops.pmul_scalar_int(ctx, ct, 3)
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, out3), 3 * v1,
+                               atol=5e-3)
+
+
+def test_mod_switch_then_ops(ckks_small, ckks_keys, rng):
+    ctx = ckks_small["ctx"]
+    v1, v2 = _rand_slots(rng, ctx), _rand_slots(rng, ctx)
+    ct1 = _enc(ckks_small, ckks_keys, v1)
+    ct2 = _enc(ckks_small, ckks_keys, v2)
+    ct1d = ops.mod_switch_to_level(ct1, ct1.level - 2)
+    out = ops.hadd(ctx, ct1d, ct2)   # auto-aligns ct2 down
+    assert out.level == ct1.level - 2
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, out), v1 + v2,
+                               atol=1e-3)
+
+
+def test_bconv_exact_vs_bigint(ckks_small, rng):
+    """BConv (eq.1) against exact CRT-lift reference, incl. the known small
+    q-multiple slack of the fast conversion."""
+    ctx = ckks_small["ctx"]
+    src = ctx.q_idx(2)
+    dst = ctx.p_idx()
+    tabs = ctx.bconv_tables(src, dst)
+    src_primes = [ctx.primes[i] for i in src]
+    dst_primes = [ctx.primes[i] for i in dst]
+    big_q = int(np.prod([int(p) for p in src_primes], dtype=object))
+    x = rns.crt_lift_centered(
+        np.stack([rng.integers(0, p, size=64, dtype=np.uint64)
+                  for p in src_primes]), src_primes)
+    limbs = np.stack([(x % p).astype(np.uint64) for p in src_primes])
+    out = np.asarray(rns.bconv(jnp.asarray(limbs), tabs))
+    out_mm = np.asarray(rns.bconv_matmul(jnp.asarray(limbs), tabs))
+    assert (out == out_mm).all(), "reference and matmul-form BConv disagree"
+    for i, p in enumerate(dst_primes):
+        # fast BConv = exact value + k*Q for small k in [0, len(src))
+        diff = (out[i].astype(object) - (x % p)) % p
+        ks = set(int(d) for d in diff)
+        allowed = {(k * big_q) % p for k in range(len(src_primes) + 1)}
+        assert ks <= allowed, f"unexpected BConv slack at dst prime {p}"

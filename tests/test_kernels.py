@@ -1,0 +1,136 @@
+"""Per-kernel validation: shape/dtype sweeps, exact equality vs ref.py
+oracles (integer kernels — allclose tightens to array_equal), and the
+u32-only primitive layer."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.params import find_2nth_root, find_ntt_primes
+from repro.kernels import common, ops, ref
+from repro.kernels.ref import FourStepTables
+
+
+PRIMES = [m.value for m in find_ntt_primes(30, 10, 4)]
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# u32 primitive layer
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=300, deadline=None)
+@given(a=st.integers(0, 2**32 - 1), b=st.integers(0, 2**32 - 1))
+def test_mul32_wide_property(a, b):
+    hi, lo = common.mul32_wide(jnp.uint32(a), jnp.uint32(b))
+    assert (int(hi) << 32) | int(lo) == a * b
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(0, 2**31 - 1), b_seed=st.integers(0, 2**31 - 1))
+def test_mont_mul32_property(a, b_seed):
+    q = PRIMES[0]
+    b = b_seed % q
+    a = a % (1 << 31)   # mont_mul tolerates a < 2^31 even if >= q
+    qinv = (-pow(q, -1, 1 << 32)) % (1 << 32)
+    got = int(common.mont_mul32(jnp.uint32(a), jnp.uint32(b),
+                                jnp.uint32(q), jnp.uint32(qinv)))
+    want = a * b * pow(2**32, -1, q) % q
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# modmul / mulacc kernels — shape sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("l,n", [(1, 256), (3, 512), (4, 1024), (2, 2048)])
+def test_modmul_kernel_sweep(rng, l, n):
+    primes = PRIMES[:l]
+    qs = np.array(primes, dtype=np.uint64)
+    a = rng.integers(0, 2**31, size=(l, n), dtype=np.uint64) % qs[:, None]
+    b = rng.integers(0, 2**31, size=(l, n), dtype=np.uint64) % qs[:, None]
+    got = ops.modmul(jnp.asarray(a), jnp.asarray(b), primes, interpret=True)
+    want = ref.modmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(qs))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("l,n", [(2, 512), (3, 1024)])
+def test_mulacc_kernel_sweep(rng, l, n):
+    primes = PRIMES[:l]
+    qs = np.array(primes, dtype=np.uint64)
+    a = rng.integers(0, 2**31, size=(l, n), dtype=np.uint64) % qs[:, None]
+    b = rng.integers(0, 2**31, size=(l, n), dtype=np.uint64) % qs[:, None]
+    c = rng.integers(0, 2**31, size=(l, n), dtype=np.uint64) % qs[:, None]
+    got = ops.mulacc(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), primes,
+                     interpret=True)
+    want = ref.fused_mulacc_ref(jnp.asarray(a), jnp.asarray(b),
+                                jnp.asarray(c), jnp.asarray(qs))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# bconv kernel — eager + lazy schedules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,d,n", [(3, 2, 512), (5, 4, 1024), (8, 3, 512)])
+@pytest.mark.parametrize("lazy", [False, True])
+def test_bconv_kernel_sweep(rng, s, d, n, lazy):
+    src = [m.value for m in find_ntt_primes(28, 9, s)]
+    dst = PRIMES[:d]
+    v = np.stack([rng.integers(0, p, size=n, dtype=np.uint64) for p in src])
+    w = np.stack([rng.integers(0, min(dst), size=d, dtype=np.uint64)
+                  for _ in src])
+    got = ops.bconv(jnp.asarray(v), jnp.asarray(w), dst, lazy=lazy,
+                    interpret=True)
+    want = ref.bconv_ref(jnp.asarray(v), jnp.asarray(w),
+                         jnp.asarray(np.array(dst, dtype=np.uint64)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# four-step NTT kernel — shape sweep + ordering vs naive oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("log_n,log_r", [(6, 3), (8, 4), (10, 5), (10, 3)])
+def test_ntt_four_step_kernel(rng, log_n, log_r):
+    n = 1 << log_n
+    mod = find_ntt_primes(30, log_n, 1)[0]
+    q = mod.value
+    psi = find_2nth_root(q, 2 * n)
+    kern = ops.NttKernel(q, psi, log_n, log_r)
+    a = rng.integers(0, q, size=n, dtype=np.uint64)
+    got = np.asarray(kern(jnp.asarray(a), interpret=True))
+    want = np.asarray(ref.four_step_ntt_ref(jnp.asarray(a), kern.tabs))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ntt_kernel_matches_naive_eval(rng):
+    log_n, log_r = 6, 3
+    n = 1 << log_n
+    mod = find_ntt_primes(30, log_n, 1)[0]
+    q = mod.value
+    psi = find_2nth_root(q, 2 * n)
+    kern = ops.NttKernel(q, psi, log_n, log_r)
+    a = rng.integers(0, q, size=n, dtype=np.uint64)
+    got = np.asarray(kern(jnp.asarray(a), interpret=True))
+    naive = ref.naive_negacyclic_eval(a, q, psi)
+    ks = kern.tabs.output_index_map()
+    np.testing.assert_array_equal(got, naive[ks])
+
+
+@pytest.mark.parametrize("block_c,block_r", [(64, 4), (128, 8), (32, 2)])
+def test_ntt_kernel_block_shape_sweep(rng, block_c, block_r):
+    log_n, log_r = 8, 4
+    n = 1 << log_n
+    mod = find_ntt_primes(30, log_n, 1)[0]
+    psi = find_2nth_root(mod.value, 2 * n)
+    kern = ops.NttKernel(mod.value, psi, log_n, log_r)
+    a = rng.integers(0, mod.value, size=n, dtype=np.uint64)
+    got = np.asarray(kern(jnp.asarray(a), interpret=True,
+                          block_c=block_c, block_r=block_r))
+    want = np.asarray(ref.four_step_ntt_ref(jnp.asarray(a), kern.tabs))
+    np.testing.assert_array_equal(got, want)

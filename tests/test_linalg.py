@@ -1,0 +1,96 @@
+"""Homomorphic linear algebra: hoisting, BSGS matvec, polynomial eval."""
+import numpy as np
+import pytest
+
+from repro.core import linalg, ops
+from repro.core.ciphertext import Plaintext
+
+SCALE = 2.0 ** 26
+
+
+def _enc(stack, keys, v, level=None):
+    level = stack["params"].n_levels if level is None else level
+    pt = Plaintext(stack["encoder"].encode(v, SCALE, level), level, SCALE)
+    return stack["encryptor"].encrypt_sk(pt, keys["sk"])
+
+
+def _dec(stack, keys, ct):
+    return stack["encoder"].decode(
+        stack["encryptor"].decrypt(ct, keys["sk"]).data, ct.scale, ct.level)
+
+
+def test_hoisted_rotations_match_plain(ckks_small, ckks_keys, rng):
+    ctx, encr = ckks_small["ctx"], ckks_small["encryptor"]
+    s = ctx.n // 2
+    v = rng.normal(size=s) + 1j * rng.normal(size=s)
+    ct = _enc(ckks_small, ckks_keys, v)
+    steps = [1, 5, 17]
+    gks = encr.rotation_keygen(ckks_keys["sk"], steps)
+    hr = linalg.hoisted_rotations(ctx, ct, steps, gks)
+    for st in steps:
+        plain = ops.rotate(ctx, ct, st, gks[ctx.rotation_element(st)])
+        np.testing.assert_allclose(_dec(ckks_small, ckks_keys, hr[st]),
+                                   np.roll(v, -st), atol=5e-3)
+        np.testing.assert_allclose(_dec(ckks_small, ckks_keys, hr[st]),
+                                   _dec(ckks_small, ckks_keys, plain), atol=1e-3)
+
+
+def test_matvec_bsgs(ckks_small, ckks_keys, rng):
+    ctx, encr, enc = (ckks_small["ctx"], ckks_small["encryptor"],
+                      ckks_small["encoder"])
+    s = ctx.n // 2
+    v = 0.5 * (rng.normal(size=s) + 1j * rng.normal(size=s))
+    ct = _enc(ckks_small, ckks_keys, v)
+    M = np.zeros((s, s), dtype=np.complex128)
+    for d in rng.choice(s, size=6, replace=False):
+        dg = rng.normal(size=s) * 0.3
+        for j in range(s):
+            M[j, (j + d) % s] = dg[j]
+    diags = linalg.matrix_diagonals(M)
+    gks = encr.galois_keygen(ckks_keys["sk"], linalg.matvec_keys_needed(ctx, diags))
+    out = linalg.matvec_bsgs(ctx, ct, diags, gks, enc)
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, out), M @ v, atol=2e-2)
+    out2 = linalg.matvec_bsgs(ctx, ct, diags, gks, enc, use_hoisting=False)
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, out2), M @ v, atol=2e-2)
+
+
+def test_poly_eval_power_basis(ckks_small, ckks_keys, rng):
+    ctx, enc = ckks_small["ctx"], ckks_small["encoder"]
+    s = ctx.n // 2
+    x = rng.uniform(-1, 1, size=s)
+    ct = _enc(ckks_small, ckks_keys, x + 0j)
+    out = linalg.poly_eval_power_basis(ctx, ct, [0.25, 1.5, 0.0, -0.5],
+                                       ckks_keys["rk"], enc)
+    want = 0.25 + 1.5 * x - 0.5 * x ** 3
+    got = _dec(ckks_small, ckks_keys, out).real
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+def test_poly_eval_chebyshev(ckks_small, ckks_keys, rng):
+    ctx, enc = ckks_small["ctx"], ckks_small["encoder"]
+    s = ctx.n // 2
+    x = rng.uniform(-1, 1, size=s)
+    ct = _enc(ckks_small, ckks_keys, x + 0j)
+    # deg 7 fits the 4-level test budget (ladder depth 3 + combination 1)
+    cheb = linalg.chebyshev_coeffs(lambda t: np.sin(0.5 * np.pi * t), 7)
+    out = linalg.poly_eval_chebyshev(ctx, ct, cheb, ckks_keys["rk"], enc)
+    got = _dec(ckks_small, ckks_keys, out).real
+    np.testing.assert_allclose(got, np.sin(0.5 * np.pi * x), atol=5e-3)
+
+
+def test_adjust_to_exact_scale(ckks_small, ckks_keys, rng):
+    ctx, enc = ckks_small["ctx"], ckks_small["encoder"]
+    s = ctx.n // 2
+    v = rng.normal(size=s) + 0j
+    ct = _enc(ckks_small, ckks_keys, v)
+    target = SCALE * 1.01
+    out = linalg.adjust_to(ctx, enc, ct, ct.level - 1, target)
+    assert out.level == ct.level - 1 and out.scale == target
+    np.testing.assert_allclose(_dec(ckks_small, ckks_keys, out), v, atol=1e-3)
+
+
+def test_chebyshev_coeffs_interpolate():
+    c = linalg.chebyshev_coeffs(np.cos, 20)
+    x = np.linspace(-1, 1, 500)
+    T = np.cos(np.outer(np.arange(21), np.arccos(x)))
+    assert np.abs(c @ T - np.cos(x)).max() < 1e-12

@@ -1,0 +1,88 @@
+"""Unit + property tests for modular arithmetic (all four reduction paths)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import modarith as ma
+from repro.core.params import find_ntt_primes, is_prime, solinas_candidates
+
+Q_SOLINAS = 2**30 - 2**18 + 1    # prime, NTT-friendly up to 2N=2^18
+Q_GENERIC = 998244353            # 119*2^23+1
+
+
+def _rand(rng, q, n=4096):
+    return rng.integers(0, q, size=n, dtype=np.uint64)
+
+
+@pytest.mark.parametrize("q", [Q_SOLINAS, Q_GENERIC, (1 << 31) - 2**27 + 1])
+def test_mulmod_paths_agree(rng, q):
+    if not is_prime(q):
+        pytest.skip("non-prime test modulus")
+    a, b = _rand(rng, q), _rand(rng, q)
+    ref = (a.astype(object) * b.astype(object)) % q
+    aj, bj, qj = jnp.asarray(a), jnp.asarray(b), jnp.uint64(q)
+    assert (np.asarray(ma.mulmod(aj, bj, qj)).astype(object) == ref).all()
+    mu = jnp.uint64(ma.barrett_mu(q))
+    assert (np.asarray(ma.mulmod_barrett(aj, bj, qj, mu)).astype(object) == ref).all()
+    qi = jnp.uint64(ma.mont_qinv_neg(q))
+    r2 = jnp.uint64(ma.mont_r2(q))
+    am = ma.to_mont(aj, qj, qi, r2)
+    assert (np.asarray(ma.mont_mul(am, bj, qj, qi)).astype(object) == ref).all()
+
+
+def test_solinas_reduction(rng):
+    q = Q_SOLINAS
+    a, b = _rand(rng, q), _rand(rng, q)
+    ref = (a.astype(object) * b.astype(object)) % q
+    got = ma.mulmod_solinas(jnp.asarray(a), jnp.asarray(b), jnp.uint64(q), 30, 18)
+    assert (np.asarray(got).astype(object) == ref).all()
+
+
+def test_addsub_neg(rng):
+    q = Q_GENERIC
+    a, b = _rand(rng, q), _rand(rng, q)
+    qj = jnp.uint64(q)
+    assert (np.asarray(ma.addmod(jnp.asarray(a), jnp.asarray(b), qj))
+            == (a.astype(object) + b.astype(object)) % q).all()
+    assert (np.asarray(ma.submod(jnp.asarray(a), jnp.asarray(b), qj))
+            == (a.astype(object) - b.astype(object)) % q).all()
+    assert (np.asarray(ma.negmod(jnp.asarray(a), qj))
+            == (-a.astype(object)) % q).all()
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(0, 2**63 - 1), b=st.integers(0, 2**63 - 1))
+def test_mulhi64_property(a, b):
+    got = int(np.asarray(ma.mulhi64(jnp.uint64(a), jnp.uint64(b))))
+    assert got == (a * b) >> 64
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=st.integers(0, Q_SOLINAS - 1), b=st.integers(0, Q_SOLINAS - 1),
+       c=st.integers(0, Q_SOLINAS - 1))
+def test_ring_axioms_property(a, b, c):
+    """Field axioms mod q via the vectorized ops (distributivity etc.)."""
+    q = jnp.uint64(Q_SOLINAS)
+    aj, bj, cj = jnp.uint64(a), jnp.uint64(b), jnp.uint64(c)
+    left = ma.mulmod(aj, ma.addmod(bj, cj, q), q)
+    right = ma.addmod(ma.mulmod(aj, bj, q), ma.mulmod(aj, cj, q), q)
+    assert int(left) == int(right)
+    assert int(ma.mulmod(aj, bj, q)) == int(ma.mulmod(bj, aj, q))
+
+
+def test_prime_search_properties():
+    for log_n in (8, 10, 12):
+        mods = find_ntt_primes(30, log_n, 4)
+        assert len(set(m.value for m in mods)) == 4
+        for m in mods:
+            assert is_prime(m.value)
+            assert (m.value - 1) % (1 << (log_n + 1)) == 0
+            if m.solinas:
+                b, s = m.solinas
+                assert m.value == (1 << b) - (1 << s) + 1
+
+
+def test_solinas_candidates_ntt_friendly():
+    for p, b, s in solinas_candidates(31, 13):
+        assert is_prime(p) and (p - 1) % (1 << 13) == 0

@@ -1,0 +1,109 @@
+"""NTT correctness: roundtrip, negacyclic convolution, automorphisms."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import modarith as ma
+from repro.core import ntt as nttm
+from repro.core.params import find_ntt_primes
+
+
+@pytest.fixture(scope="module", params=[6, 8, 10])
+def tables(request):
+    log_n = request.param
+    return nttm.NttTables(find_ntt_primes(30, log_n, 3), log_n)
+
+
+def _rand_poly(rng, tables, k=3):
+    q = np.asarray(tables.q)
+    return (rng.integers(0, 2**62, size=(k, tables.n), dtype=np.uint64)
+            % q[:, None])
+
+
+def test_roundtrip(rng, tables):
+    a = _rand_poly(rng, tables)
+    back = np.asarray(nttm.intt(nttm.ntt(jnp.asarray(a), tables), tables))
+    assert (back == a).all()
+
+
+def test_negacyclic_convolution(rng, tables):
+    a = _rand_poly(rng, tables)
+    b = _rand_poly(rng, tables)
+    fa = nttm.ntt(jnp.asarray(a), tables)
+    fb = nttm.ntt(jnp.asarray(b), tables)
+    prod = ma.mulmod(fa, fb, tables.q[:, None])
+    conv = np.asarray(nttm.intt(prod, tables))
+    for l in range(a.shape[0]):
+        ref = nttm.negacyclic_convolve_ref(a[l], b[l], int(np.asarray(tables.q)[l]))
+        assert (conv[l] == ref).all()
+
+
+def test_linearity(rng, tables):
+    a = _rand_poly(rng, tables)
+    b = _rand_poly(rng, tables)
+    q = tables.q[:, None]
+    lhs = nttm.ntt(ma.addmod(jnp.asarray(a), jnp.asarray(b), q), tables)
+    rhs = ma.addmod(nttm.ntt(jnp.asarray(a), tables),
+                    nttm.ntt(jnp.asarray(b), tables), q)
+    assert (np.asarray(lhs) == np.asarray(rhs)).all()
+
+
+@pytest.mark.parametrize("step", [1, 2, 5, -3])
+def test_automorphism_eval_equals_coeff(rng, tables, step):
+    n = tables.n
+    p0 = int(np.asarray(tables.q)[0])
+    a = _rand_poly(rng, tables)[0]
+    k = nttm.galois_element(step, n)
+    # direct scatter definition
+    out = np.zeros(n, dtype=np.uint64)
+    for i in range(n):
+        e = (i * k) % (2 * n)
+        out[e % n] = (p0 - a[i]) % p0 if e >= n else a[i]
+    # gather form
+    src, neg = nttm.coeff_perm(k, n)
+    gathered = np.where(neg, (p0 - a[src]) % p0, a[src])
+    assert (gathered == out).all()
+    # eval-domain permutation
+    t0 = tables.slice_limbs([0])
+    perm = nttm.eval_perm(k, p0, tables.psi[0], tables.log_n)
+    got = np.asarray(nttm.ntt(jnp.asarray(a[None]), t0))[0][perm]
+    want = np.asarray(nttm.ntt(jnp.asarray(out[None]), t0))[0]
+    assert (got == want).all()
+
+
+def test_eval_perm_is_modulus_independent(tables):
+    """The NTT-slot exponent ordering is structural, not modulus-specific."""
+    qs = np.asarray(tables.q)
+    k = nttm.galois_element(1, tables.n)
+    perms = [nttm.eval_perm(k, int(qs[l]), tables.psi[l], tables.log_n)
+             for l in range(len(qs))]
+    for p in perms[1:]:
+        assert (p == perms[0]).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ntt_parseval_like_property(seed):
+    """NTT of a monomial X^i has all slots = psi-power (unit magnitude mod p):
+    multiplying by X^i in coeff domain == twiddle-scaling in eval domain."""
+    log_n = 6
+    tabs = nttm.NttTables(find_ntt_primes(30, log_n, 1), log_n)
+    n = tabs.n
+    rng = np.random.default_rng(seed)
+    i = int(rng.integers(0, n))
+    p = int(np.asarray(tabs.q)[0])
+    a = rng.integers(0, p, size=(1, n), dtype=np.uint64)
+    # multiply by X^i via negacyclic shift in coeff domain
+    mono = np.zeros((1, n), dtype=np.uint64)
+    mono[0, i] = 1
+    fa = nttm.ntt(jnp.asarray(a), tabs)
+    fm = nttm.ntt(jnp.asarray(mono), tabs)
+    prod = nttm.intt(ma.mulmod(fa, fm, tabs.q[:, None]), tabs)
+    ref = nttm.negacyclic_convolve_ref(a[0], mono[0], p)
+    assert (np.asarray(prod)[0] == ref).all()
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(99)

@@ -1,0 +1,89 @@
+"""Mapping framework (§IV-F): trace capture, level inference, load-save
+pipeline generation + the paper's naive-vs-load-save ablation direction."""
+import pytest
+
+from repro.core import pipeline as pl
+from repro.core import trace as tr
+from repro.core.params import paper_params_bootstrap, test_params
+
+
+def _helr_like(x, w, consts=None):
+    s = x * w
+    for k in (1, 2, 4, 8):
+        s = s + s.rotate(k)
+    a = s * consts["c1"]
+    b = s * s
+    c = b * s
+    sg = a + c * consts["c3"]
+    return w + sg * x
+
+
+@pytest.fixture(scope="module")
+def helr_trace():
+    t = tr.trace_program(_helr_like, 2, const_names=("c1", "c3"))
+    tr.infer_levels(t, start_level=12)
+    return t
+
+
+def test_trace_capture(helr_trace):
+    kinds = [o.kind for o in helr_trace.ops]
+    assert kinds.count("input") == 2
+    assert kinds.count("hmul") == 4
+    assert kinds.count("rotate") == 4
+    assert all(o.level is not None for o in helr_trace.compute_ops())
+
+
+def test_level_inference_monotone(helr_trace):
+    for op in helr_trace.compute_ops():
+        for a in op.args:
+            parent = helr_trace.ops[a]
+            if parent.level is not None:
+                assert op.level <= parent.level
+
+
+def test_level_budget_exhaustion_detected():
+    t = tr.trace_program(_helr_like, 2, const_names=("c1", "c3"))
+    with pytest.raises(AssertionError):
+        tr.infer_levels(t, start_level=2)   # too shallow for depth-4 program
+
+
+def test_op_cost_model_sane():
+    params = paper_params_bootstrap()
+    op = tr.FheOp(0, "hmul", (0, 1), level=20)
+    c = tr.op_cost(params, op)
+    assert c.ntts > 0 and c.modmuls > 0
+    assert c.const_bytes == tr.evk_bytes(params)
+    # keyswitch dominates an hmul: more NTT work at higher level
+    op_lo = tr.FheOp(0, "hmul", (0, 1), level=5)
+    assert tr.op_cost(params, op_lo).ntts < c.ntts
+
+
+def test_load_save_beats_naive(helr_trace):
+    """The paper's regime: partition capacity below a coarse stage's
+    constant footprint -> naive mapper reloads per input, load-save wins."""
+    params = paper_params_bootstrap()
+    mem = pl.MemoryModel(n_partitions=8, partition_bytes=64 * 2 ** 20)
+    sched = pl.generate_load_save_pipeline(helr_trace, params, mem)
+    naive = pl.generate_naive_pipeline(helr_trace, params, mem)
+    assert naive.reload_per_op, "naive should overflow at 64MB partitions"
+    b = 32
+    assert sched.bottleneck_latency(b) < naive.bottleneck_latency(b)
+    assert len(sched.stages) >= 1
+    assert all(st.partition >= 0 for st in sched.stages)
+
+
+def test_pipeline_covers_all_ops(helr_trace):
+    params = test_params()
+    mem = pl.MemoryModel(n_partitions=4)
+    sched = pl.generate_load_save_pipeline(helr_trace, params, mem)
+    staged = [o.idx for st in sched.stages for o in st.ops]
+    assert sorted(staged) == sorted(o.idx for o in helr_trace.compute_ops())
+    assert len(staged) == len(set(staged)), "op scheduled twice"
+
+
+def test_stage_partitions_round_robin(helr_trace):
+    params = test_params()
+    mem = pl.MemoryModel(n_partitions=4, partition_bytes=1 * 2 ** 20)
+    sched = pl.generate_load_save_pipeline(helr_trace, params, mem)
+    for i, st in enumerate(sched.stages):
+        assert st.partition == i % mem.n_partitions

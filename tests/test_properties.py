@@ -1,0 +1,110 @@
+"""Hypothesis property tests on system-level invariants."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rns
+from repro.core.params import find_ntt_primes
+from repro.sharding.rules import default_rules, serving_rules, spec_for_shape
+
+
+# ---------------------------------------------------------------------------
+# sharding rules invariants
+# ---------------------------------------------------------------------------
+
+def _mesh(shape=(4, 4)):
+    import jax
+    return jax.sharding.AbstractMesh(shape, ("data", "model"))
+
+
+@settings(max_examples=60, deadline=None)
+@given(dims=st.lists(st.sampled_from([1, 2, 3, 8, 10, 16, 56, 128, 256]),
+                     min_size=1, max_size=4),
+       names=st.lists(st.sampled_from(["batch", "heads", "kv_heads", "mlp",
+                                       "embed", "vocab", None]),
+                      min_size=1, max_size=4))
+def test_spec_resolution_always_valid(dims, names):
+    """For ANY shape/logical combination: no mesh axis used twice, and
+    every sharded dim is divisible by its axis product."""
+    n = min(len(dims), len(names))
+    dims, names = dims[:n], names[:n]
+    mesh = _mesh()
+    sizes = dict(mesh.shape)
+    spec = spec_for_shape(mesh, names, dims)
+    used = []
+    for dim, entry in zip(dims, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        used += list(axes)
+        total = int(np.prod([sizes[a] for a in axes]))
+        assert dim % total == 0, (dims, names, spec)
+    assert len(used) == len(set(used)), f"axis reused: {spec}"
+
+
+def test_serving_rules_no_data_on_cache_seq_conflict():
+    mesh = _mesh()
+    r = serving_rules()
+    spec = spec_for_shape(mesh, ("layers", "batch", "kv_heads", "seq",
+                                 "head_dim"), (4, 8, 1, 4096, 128), r)
+    assert spec[3] == "model", "serving rules must shard cache seq on model"
+    d = default_rules()
+    spec_d = spec_for_shape(mesh, ("layers", "batch", "kv_heads", "seq",
+                                   "head_dim"), (4, 8, 1, 4096, 128), d)
+    assert spec_d[3] is None
+
+
+# ---------------------------------------------------------------------------
+# RNS / CRT invariants
+# ---------------------------------------------------------------------------
+
+PRIMES = [m.value for m in find_ntt_primes(28, 8, 4)]
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_crt_lift_roundtrip_property(seed):
+    """crt_lift(residues(x)) == x for |x| < Q/2."""
+    rng = np.random.default_rng(seed)
+    big_q = int(np.prod([int(p) for p in PRIMES], dtype=object))
+    xs = rng.integers(-2**60, 2**60, size=16)
+    limbs = np.stack([(xs % p).astype(np.uint64) for p in PRIMES])
+    lifted = rns.crt_lift_centered(limbs, PRIMES)
+    assert all(int(a) == int(b) for a, b in zip(lifted, xs))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bconv_identity_basis_property(seed):
+    """BConv from a basis to itself is the identity (qhat*qhat^-1 = 1)."""
+    rng = np.random.default_rng(seed)
+    tabs = rns.make_bconv_tables(PRIMES, PRIMES)
+    v = np.stack([rng.integers(0, p, size=32, dtype=np.uint64)
+                  for p in PRIMES])
+    out = np.asarray(rns.bconv(jnp.asarray(v), tabs))
+    big_q = int(np.prod([int(p) for p in PRIMES], dtype=object))
+    # fast conversion: out == v + k*Q (mod p_i) with 0 <= k < n_src
+    x = rns.crt_lift_centered(v, PRIMES)
+    for i, p in enumerate(PRIMES):
+        diff = (out[i].astype(object) - (x % p)) % p
+        allowed = {(k * big_q) % p for k in range(len(PRIMES) + 1)}
+        assert set(int(d) for d in diff) <= allowed
+
+
+# ---------------------------------------------------------------------------
+# data pipeline invariant
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 10000), batch=st.sampled_from([1, 2, 4]),
+       seq=st.sampled_from([8, 16, 32]))
+def test_dataset_labels_are_shifted_tokens(step, batch, seq):
+    from repro.configs import get_config
+    from repro.data.pipeline import SyntheticLMDataset
+    cfg = get_config("granite-3-8b", smoke=True)
+    ds = SyntheticLMDataset(cfg, batch=batch, seq=seq)
+    b = ds.batch_at(step)
+    assert b["tokens"].shape == (batch, seq)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+    assert (b["tokens"] >= 0).all() and (b["tokens"] < cfg.vocab).all()
