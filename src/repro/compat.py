@@ -1,0 +1,46 @@
+"""jax version-compatibility shims.
+
+The codebase targets current jax (jax.shard_map with check_vma,
+jax.set_mesh, jax.make_mesh axis_types); CI and some containers carry
+jax 0.4.x where those APIs live elsewhere or don't exist. Every
+version-sensitive call site routes through here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh across versions: AxisType landed after 0.4.x."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """Stable jax.shard_map (check_vma) vs jax.experimental.shard_map
+    (check_rep), with replication checking off either way."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def axis_size(axis):
+    """jax.lax.axis_size inside a shard_map/pmap body; on 0.4.x it
+    doesn't exist — psum of 1 over the axis is the standard spelling."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh`: jax.set_mesh on current jax;
+    on 0.4.x the Mesh object itself is the context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

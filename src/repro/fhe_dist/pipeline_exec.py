@@ -22,6 +22,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 
+from repro.compat import shard_map as _shard_map
+
+
 def _round_body(x_stack, *, stage_fns: Sequence[Callable], axis: str,
                 n_micro: int):
     """shard_map body over `axis`. x_stack: (n_micro, ...) microbatches,
@@ -33,8 +36,8 @@ def _round_body(x_stack, *, stage_fns: Sequence[Callable], axis: str,
     outputs are collected by shifting them around the ring to rank 0's
     output stack (gathered at the end).
     """
-    n_dev = jax.lax.axis_size(axis)
-    rank = jax.lax.axis_index(axis)
+    n_dev = len(stage_fns)     # == axis size; static (lax.axis_size is
+    rank = jax.lax.axis_index(axis)  # not available on older jax)
     buf = jnp.zeros_like(x_stack[0])
     out_stack = jnp.zeros_like(x_stack)
     perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
@@ -66,13 +69,10 @@ def run_pipeline_round(stage_fns: Sequence[Callable], x_stack, mesh: Mesh,
     microbatch stack x_stack (n_micro, ...). len(stage_fns) must equal the
     `axis` size. Returns the processed stack (replicated)."""
     n_micro = x_stack.shape[0]
-    fn = jax.shard_map(
+    fn = _shard_map(
         partial(_round_body, stage_fns=tuple(stage_fns), axis=axis,
                 n_micro=n_micro),
-        mesh=mesh,
-        in_specs=(P(),),
-        out_specs=P(),
-        check_vma=False)
+        mesh, (P(),), P())
     return fn(x_stack)
 
 

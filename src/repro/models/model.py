@@ -329,13 +329,13 @@ def _moe_layer(x, bp, cfg, mesh, variant="auto"):
     else:
         body = partial(moe_mod.moe_psum, cfg=cfg)
         tok_spec = P(dp_axes, None)
-    mapped = jax.shard_map(
+    from repro.compat import shard_map
+    mapped = shard_map(
         lambda t, wr, wg, wu, wd: body(
             t, {"w_router": wr, "w_gate": wg, "w_up": wu, "w_down": wd}),
-        mesh=mesh,
-        in_specs=(tok_spec, P(None, None)) + wspec,
-        out_specs=(tok_spec, P()),
-        check_vma=False)
+        mesh,
+        (tok_spec, P(None, None)) + wspec,
+        (tok_spec, P()))
     out, aux = mapped(tokens, m["w_router"], m["w_gate"], m["w_up"],
                       m["w_down"])
     aux = jnp.mean(aux)

@@ -1,0 +1,42 @@
+"""Multi-tenant FHE serving runtime (request queue → slot batcher →
+key cache → pipelined executor).
+
+FHEmem's end-to-end flow (§IV-F) keeps constants (evk, rotation keys,
+plaintext weights) resident while batches of encrypted inputs stream
+through pipeline rounds — exactly the economics of a serving system,
+where key/constant movement, not compute, dominates sustained
+throughput. This package turns the offline pieces (core/trace.py,
+core/pipeline.py, fhe_dist/pipeline_exec.py) into an online runtime:
+
+* ``queue``         admission control + per-tenant request queues with
+                    deadlines
+* ``batcher``       packs pending requests into CKKS slot groups and the
+                    load-save pipeline's input-batch dimension
+                    (max-wait / max-batch policy)
+* ``keycache``      capacity-aware LRU over evk / rotation-key /
+                    plaintext-constant footprints, keyed by the mapper's
+                    ``const_bytes`` accounting
+* ``compile_cache`` trace → PipelineSchedule memoization
+* ``executor``      round-based engine draining the batcher through the
+                    analytic MemoryModel backend or the real
+                    pipeline_exec mesh backend
+* ``metrics``       p50/p99 latency, throughput, cache hit rate,
+                    partition occupancy
+
+Entry point: ``python -m repro.launch.serve_fhe --smoke``.
+"""
+from repro.runtime.queue import AdmissionQueue, Request, RequestStatus
+from repro.runtime.batcher import Batch, BatchPolicy, SlotBatcher
+from repro.runtime.keycache import KeyCache
+from repro.runtime.compile_cache import CompileCache, trace_fingerprint
+from repro.runtime.executor import (AnalyticBackend, MeshBackend,
+                                    PipelinedExecutor, Workload)
+from repro.runtime.metrics import LatencyStats, MetricsRegistry
+
+__all__ = [
+    "AdmissionQueue", "Request", "RequestStatus",
+    "Batch", "BatchPolicy", "SlotBatcher",
+    "KeyCache", "CompileCache", "trace_fingerprint",
+    "AnalyticBackend", "MeshBackend", "PipelinedExecutor", "Workload",
+    "LatencyStats", "MetricsRegistry",
+]

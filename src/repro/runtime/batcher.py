@@ -1,0 +1,160 @@
+"""Slot batcher: packs pending requests into CKKS slot groups and the
+load-save pipeline's input-batch dimension.
+
+Two packing axes, mirroring the paper's batch economics (§IV-F):
+
+* **slot axis** — a CKKS ciphertext at ring degree N carries N/2 slots;
+  small requests of the same workload share one ciphertext (each request
+  owns a contiguous slot range, never split across ciphertexts);
+* **batch axis** — packed ciphertexts form the input batch that streams
+  through one pipeline round, amortizing each stage's constant load
+  across the whole batch.
+
+Dispatch policy is the classic max-batch / max-wait tradeoff: fire when
+the batch axis is full, when the oldest request has waited ``max_wait_s``,
+or when an admitted deadline is about to become unmeetable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.runtime.metrics import MetricsRegistry
+from repro.runtime.queue import AdmissionQueue, Request, RequestStatus
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    slots_per_ct: int                # CKKS slots per ciphertext (params.slots)
+    max_batch: int = 8               # ciphertexts per pipeline batch
+    max_wait_s: float = 5e-3         # oldest-request wait before firing
+    deadline_slack_s: float = 0.0    # fire early if a deadline is this close
+
+    @property
+    def capacity_slots(self) -> int:
+        return self.max_batch * self.slots_per_ct
+
+
+@dataclasses.dataclass
+class Batch:
+    workload: str
+    requests: List[Request]
+    slot_groups: List[List[Request]]     # one inner list per ciphertext
+    formed_s: float
+    outputs: object = None               # filled by the mesh backend
+
+    @property
+    def n_ciphertexts(self) -> int:
+        return len(self.slot_groups)
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.requests)
+
+    def slot_utilization(self, slots_per_ct: int) -> float:
+        used = sum(r.slots_needed for r in self.requests)
+        return used / (self.n_ciphertexts * slots_per_ct) \
+            if self.n_ciphertexts else 0.0
+
+
+def pack_slot_groups(requests: List[Request], slots_per_ct: int,
+                     max_groups: int) -> tuple:
+    """First-fit-decreasing bin packing of requests into ciphertexts.
+
+    Returns (groups, overflow): requests that would need a group beyond
+    ``max_groups`` — or that alone exceed ``slots_per_ct`` — overflow.
+    """
+    groups: List[List[Request]] = []
+    free: List[int] = []
+    overflow: List[Request] = []
+    for r in sorted(requests, key=lambda r: -r.slots_needed):
+        if r.slots_needed > slots_per_ct:
+            overflow.append(r)
+            continue
+        for i, f in enumerate(free):
+            if r.slots_needed <= f:
+                groups[i].append(r)
+                free[i] -= r.slots_needed
+                break
+        else:
+            if len(groups) < max_groups:
+                groups.append([r])
+                free.append(slots_per_ct - r.slots_needed)
+            else:
+                overflow.append(r)
+    return groups, overflow
+
+
+class SlotBatcher:
+    def __init__(self, queue: AdmissionQueue, policy: BatchPolicy,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.queue = queue
+        self.policy = policy
+        self.metrics = metrics or queue.metrics
+
+    def _should_fire(self, now: float, workload: str) -> bool:
+        p = self.policy
+        n, slots = self.queue.pending_demand(now, workload)
+        if n == 0:
+            return False
+        if slots >= p.capacity_slots:
+            return True
+        oldest = self.queue.oldest_arrival(now, workload)
+        if oldest is not None and now - oldest >= p.max_wait_s:
+            return True
+        dl = self.queue.earliest_deadline(now, workload)
+        return dl is not None and dl - now <= p.deadline_slack_s
+
+    def next_fire_time(self, now: float) -> Optional[float]:
+        """Earliest future instant any workload's max-wait clock fires
+        (virtual-clock executors advance to this when idle)."""
+        best = None
+        for w in self.queue.pending_workloads(now):
+            oldest = self.queue.oldest_arrival(now, w)
+            if oldest is None:
+                continue
+            t = oldest + self.policy.max_wait_s
+            dl = self.queue.earliest_deadline(now, w)
+            if dl is not None:
+                t = min(t, dl - self.policy.deadline_slack_s)
+            if best is None or t < best:
+                best = t
+        return best
+
+    def poll(self, now: float) -> Optional[Batch]:
+        """Form at most one batch. Requests of different workloads never
+        share a batch (they compile to different schedules); workloads
+        are served in first-arrival order."""
+        p = self.policy
+        for workload in self.queue.pending_workloads(now):
+            if not self._should_fire(now, workload):
+                continue
+            taken = self.queue.take(now, workload,
+                                    max_requests=p.capacity_slots,
+                                    max_slots=p.capacity_slots)
+            groups, overflow = pack_slot_groups(taken, p.slots_per_ct,
+                                                p.max_batch)
+            # requeue latest-arrival first so appendleft leaves each
+            # tenant's queue in arrival order (overflow comes out of the
+            # packer size-sorted, not arrival-sorted)
+            for r in sorted(overflow, key=lambda r: r.arrival_s,
+                            reverse=True):
+                if r.slots_needed > p.slots_per_ct:
+                    # can never fit in one ciphertext — unservable
+                    r.status = RequestStatus.REJECTED
+                    self.metrics.incr("requests_oversized")
+                else:
+                    self.queue.requeue(r)
+                    self.metrics.incr("batcher_overflow_requeued")
+            if not groups:
+                continue
+            batch = Batch(workload, [r for g in groups for r in g],
+                          groups, formed_s=now)
+            # wait is observed here, not in take(): a requeued overflow
+            # request must be sampled once, on the batch it ships in
+            for r in batch.requests:
+                self.metrics.queue_wait.observe(max(0.0, now - r.arrival_s))
+            self.metrics.incr("batches_formed")
+            self.metrics.incr("ciphertexts_batched", batch.n_ciphertexts)
+            return batch
+        return None

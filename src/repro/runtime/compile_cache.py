@@ -1,0 +1,74 @@
+"""Trace → PipelineSchedule memoization.
+
+Mapping a trace (stage splitting + placement, core/pipeline.py) is pure
+in (trace structure, CKKS params, memory model, mapper policy), so a
+serving runtime should pay it once per distinct workload, not per
+batch. Keys are structural fingerprints — two traces of the same
+program text captured separately hash identically, so tenants sharing a
+model share one compiled schedule.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.params import CkksParams
+from repro.core.pipeline import (MemoryModel, PipelineSchedule,
+                                 generate_load_save_pipeline)
+from repro.core.trace import FheTrace
+from repro.runtime.metrics import MetricsRegistry
+
+
+def trace_fingerprint(trace: FheTrace) -> str:
+    """Structural hash: op kinds, dataflow edges, meta, inferred levels.
+
+    Index-based (SSA indices are deterministic given program structure),
+    so identical programs traced twice collide — by design.
+    """
+    h = hashlib.sha256()
+    for op in trace.ops:
+        meta = tuple(sorted((k, repr(v)) for k, v in op.meta.items()))
+        h.update(repr((op.idx, op.kind, op.args, meta, op.level)).encode())
+    h.update(repr((tuple(trace.inputs), tuple(trace.outputs),
+                   tuple(trace.consts))).encode())
+    return h.hexdigest()
+
+
+def _params_key(params: CkksParams) -> Tuple:
+    return (params.log_n, params.log_scale, params.n_levels, params.dnum,
+            params.first_mod_bits, params.scale_mod_bits,
+            params.special_mod_bits)
+
+
+def _mem_key(mem: MemoryModel) -> Tuple:
+    return (mem.n_partitions, mem.partition_bytes, mem.load_bw,
+            mem.modmul_throughput, mem.ntt_row_cost, mem.transfer_bw)
+
+
+class CompileCache:
+    """Unbounded memo of compiled schedules (schedules are small — op
+    lists plus floats — and the workload universe is the registry, not
+    the request stream, so no eviction policy is needed)."""
+
+    def __init__(self, metrics: Optional[MetricsRegistry] = None):
+        self.metrics = metrics or MetricsRegistry()
+        self._cache: Dict[Tuple, PipelineSchedule] = {}
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def get_schedule(self, trace: FheTrace, params: CkksParams,
+                     mem: MemoryModel,
+                     mapper: Callable[..., PipelineSchedule]
+                     = generate_load_save_pipeline,
+                     **mapper_kwargs) -> PipelineSchedule:
+        key = (trace_fingerprint(trace), _params_key(params), _mem_key(mem),
+               getattr(mapper, "__name__", repr(mapper)),
+               tuple(sorted(mapper_kwargs.items())))
+        hit = key in self._cache
+        if hit:
+            self.metrics.incr("compile_hits")
+        else:
+            self.metrics.incr("compile_misses")
+            self._cache[key] = mapper(trace, params, mem, **mapper_kwargs)
+        return self._cache[key]

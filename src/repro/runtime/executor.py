@@ -1,0 +1,357 @@
+"""Round-based serving engine: drains the slot batcher through a
+pipeline backend behind one interface.
+
+Two backends, one contract (``execute(schedule, batch, ...) -> seconds``):
+
+* ``AnalyticBackend`` — the MemoryModel cost model (core/pipeline.py)
+  driven as a discrete-event simulation on a virtual clock. Stage
+  constant loads consult the KeyCache: a resident stage costs zero load
+  time for the next batch — the cross-batch extension of the paper's
+  "load once per round" property (§IV-F). Deterministic; runs anywhere.
+* ``MeshBackend`` — the real distributed executor
+  (fhe_dist/pipeline_exec.py): batches become microbatch stacks flowing
+  rank-to-rank via collective_permute, stage constants become
+  device-resident arrays cached across batches, service time is wall
+  clock.
+
+``PipelinedExecutor`` owns the event loop: admit arrivals → poll the
+batcher → compile (memoized) → execute → record completions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.params import CkksParams
+from repro.core.pipeline import (MemoryModel, PipelineSchedule,
+                                 generate_load_save_pipeline)
+from repro.core.trace import FheTrace, infer_levels, trace_program
+from repro.runtime.batcher import Batch, BatchPolicy, SlotBatcher
+from repro.runtime.compile_cache import CompileCache
+from repro.runtime.keycache import KeyCache
+from repro.runtime.metrics import MetricsRegistry
+from repro.runtime.queue import AdmissionQueue, Request, RequestStatus
+
+
+@dataclasses.dataclass
+class Workload:
+    """A registered FHE program: traced once, compiled per (params, mem)
+    via the compile cache, shared by every tenant that names it."""
+    name: str
+    trace: FheTrace
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+class AnalyticBackend:
+    """Virtual-clock service-time model with cache-aware constant loads."""
+
+    def __init__(self, mem: MemoryModel):
+        self.mem = mem
+
+    def execute(self, schedule: PipelineSchedule, batch: Batch, *,
+                key_cache: Optional[KeyCache],
+                metrics: MetricsRegistry, workload: str) -> float:
+        b = max(1, batch.n_ciphertexts)
+        # the schedule's own cost model is the single source of truth;
+        # the key cache only substitutes the load term: a resident
+        # stage streams nothing (reload_per_op stages overflow the
+        # partition, so residency cannot help them by construction)
+        times = schedule.stage_times(b)
+        total = 0.0
+        for rnd in schedule.rounds:
+            round_times = []
+            for st in rnd:
+                load, compute, transfer = times[st.idx]
+                if key_cache is not None and not schedule.reload_per_op:
+                    _, _, load = key_cache.get_or_load(
+                        (workload, "stage", st.idx), st.const_bytes)
+                busy = load + max(compute, transfer)
+                round_times.append((busy, compute, transfer))
+                metrics.occupancy.add(st.partition, busy)
+            # within a round stages overlap (pipelined): worst stage
+            # bounds the steady state, plus pipeline fill
+            worst = max(t[0] for t in round_times)
+            fill = sum(max(c, t) / b for (_, c, t) in round_times)
+            total += worst + fill
+        return total
+
+
+def _identity_stage(x):
+    return x
+
+
+def default_stage_fn_builder(stage, const):
+    """Shape-preserving placeholder stage body: an affine map with the
+    stage's (cached, device-resident) constant. Real FHE stage bodies
+    plug in here once core ops are wired batch-wise; the pipeline
+    structure, residency, and transfer pattern are already the real
+    ones."""
+    import jax.numpy as jnp
+    w, bias = const[0], const[1]
+    def fn(x):
+        return x * w + bias
+    return fn
+
+
+class MeshBackend:
+    """Real pipelined execution on a jax mesh via
+    fhe_dist.pipeline_exec.run_load_save_pipeline.
+
+    Batches become (n_ciphertexts, slots_per_ct) float stacks (each
+    request's payload written into its owned slot range); schedule
+    rounds are regrouped into chunks of the mesh's data-axis size
+    (identity-padded), so the same schedule runs on any device count.
+    Stage constants are materialized host→device through the KeyCache:
+    a hit reuses the resident device array.
+    """
+
+    def __init__(self, mesh=None, axis: str = "data",
+                 slots_per_ct: int = 128,
+                 stage_fn_builder: Callable = default_stage_fn_builder,
+                 pad_batch_to: Optional[int] = None):
+        import jax
+        from repro.launch.mesh import make_host_mesh
+        self.mesh = mesh if mesh is not None else make_host_mesh(
+            data=jax.local_device_count(), model=1)
+        self.axis = axis
+        self.slots_per_ct = slots_per_ct
+        self.stage_fn_builder = stage_fn_builder
+        # pad every batch to this many microbatches so each workload
+        # compiles exactly one XLA program (classic serving bucketing)
+        self.pad_batch_to = pad_batch_to
+        self._jit: Dict[Tuple, Callable] = {}
+
+    def _make_const(self, stage_idx: int):
+        import numpy as np
+        import jax.numpy as jnp
+        rng = np.random.default_rng(1000 + stage_idx)
+        w = 1.0 - 1e-3 * rng.uniform(size=(self.slots_per_ct,))
+        bias = 1e-3 * rng.standard_normal((self.slots_per_ct,))
+        return jnp.asarray(np.stack([w, bias]).astype(np.float32))
+
+    def _pack(self, batch: Batch, n_micro: int):
+        import numpy as np
+        import jax.numpy as jnp
+        x = np.zeros((n_micro, self.slots_per_ct), dtype=np.float32)
+        for ct_i, group in enumerate(batch.slot_groups):
+            off = 0
+            for r in group:
+                n = r.slots_needed
+                if r.payload is not None:
+                    try:
+                        v = np.asarray(r.payload,
+                                       dtype=np.float32).ravel()[:n]
+                    except (TypeError, ValueError):
+                        v = None   # opaque payload (e.g. a Ciphertext):
+                    if v is not None:  # slots stay zero, request still rides
+                        x[ct_i, off:off + len(v)] = v
+                off += n
+        return jnp.asarray(x)
+
+    def execute(self, schedule: PipelineSchedule, batch: Batch, *,
+                key_cache: Optional[KeyCache],
+                metrics: MetricsRegistry, workload: str) -> float:
+        import jax
+        from repro.fhe_dist.pipeline_exec import run_load_save_pipeline
+
+        # residency accounting + device-resident constants (with no key
+        # cache, constants are only materialized when compiling below)
+        consts = None
+        if key_cache is not None:
+            consts = [key_cache.get_or_load(
+                (workload, "stage", st.idx), st.const_bytes,
+                loader=lambda i=st.idx: self._make_const(i))[0]
+                for st in schedule.stages]
+
+        # pad to the bucket size, but never below the actual batch —
+        # a misconfigured pad_batch_to < max_batch must not drop groups
+        n_micro = max(self.pad_batch_to or 0, batch.n_ciphertexts, 1)
+        # one XLA program per (workload, stage count, bucket size);
+        # _make_const is deterministic per stage idx, so a closure built
+        # on the first call stays valid across keycache evictions
+        key = (workload, len(schedule.stages), n_micro)
+        if key not in self._jit:
+            if consts is None:
+                consts = [self._make_const(st.idx)
+                          for st in schedule.stages]
+            fns = [self.stage_fn_builder(st, c)
+                   for st, c in zip(schedule.stages, consts)]
+            n_dev = self.mesh.shape[self.axis]
+            rounds = []
+            for i in range(0, len(fns), n_dev):
+                chunk = fns[i:i + n_dev]
+                chunk += [_identity_stage] * (n_dev - len(chunk))
+                rounds.append(chunk)
+            self._jit[key] = jax.jit(
+                lambda x, _r=rounds: run_load_save_pipeline(
+                    _r, x, self.mesh, self.axis))
+
+        x = self._pack(batch, n_micro)
+        t0 = time.perf_counter()
+        out = self._jit[key](x)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        n_rounds = max(1, len(schedule.rounds))
+        for st in schedule.stages:
+            metrics.occupancy.add(st.partition, dt / n_rounds)
+        batch.outputs = out
+        return dt
+
+
+# ---------------------------------------------------------------------------
+# executor
+# ---------------------------------------------------------------------------
+
+class PipelinedExecutor:
+    """Admission queue → slot batcher → compile cache → backend, driven
+    on a virtual clock (event times from the analytic backend) or wall
+    clock deltas (mesh backend) — the loop is the same either way."""
+
+    def __init__(self, params: CkksParams, mem: MemoryModel,
+                 backend=None, policy: Optional[BatchPolicy] = None,
+                 key_cache: Optional[KeyCache] = None,
+                 max_depth_per_tenant: int = 256,
+                 mapper: Callable[..., PipelineSchedule]
+                 = generate_load_save_pipeline):
+        self.params = params
+        self.mem = mem
+        self.metrics = MetricsRegistry(n_partitions=mem.n_partitions)
+        self.backend = backend or AnalyticBackend(mem)
+        self.policy = policy or BatchPolicy(slots_per_ct=params.slots)
+        self.queue = AdmissionQueue(max_depth_per_tenant, self.metrics)
+        self.batcher = SlotBatcher(self.queue, self.policy, self.metrics)
+        # bucket mesh batches at max_batch so warmup() pre-compiles the
+        # one XLA program every serving batch will use
+        if getattr(self.backend, "pad_batch_to", 0) is None:
+            self.backend.pad_batch_to = self.policy.max_batch
+        self.key_cache = key_cache
+        if key_cache is not None:
+            key_cache.metrics = self.metrics   # one registry for all parts
+        self.compile_cache = CompileCache(self.metrics)
+        self.mapper = mapper
+        self.workloads: Dict[str, Workload] = {}
+
+    # -- workload registry ---------------------------------------------------
+
+    def register(self, name: str, fn: Callable, n_inputs: int,
+                 const_names: Sequence[str] = (),
+                 start_level: int = 10) -> Workload:
+        trace = trace_program(fn, n_inputs, const_names)
+        infer_levels(trace, start_level=start_level)
+        w = Workload(name, trace)
+        self.workloads[name] = w
+        return w
+
+    def register_trace(self, name: str, trace: FheTrace) -> Workload:
+        w = Workload(name, trace)
+        self.workloads[name] = w
+        return w
+
+    # -- request path --------------------------------------------------------
+
+    def submit(self, tenant: str, workload: str, now: float,
+               slots_needed: int = 1, deadline_s: Optional[float] = None,
+               payload=None) -> Request:
+        assert workload in self.workloads, f"unregistered workload {workload}"
+        req = Request(self.queue.next_request_id(), tenant, workload,
+                      arrival_s=now, slots_needed=slots_needed,
+                      deadline_s=deadline_s, payload=payload)
+        self._admit(req)
+        return req
+
+    def _admit(self, req: Request) -> None:
+        """Admission door: a request that can never fit one ciphertext
+        is rejected here, not left to starve in the queue."""
+        if req.slots_needed > self.policy.slots_per_ct:
+            req.status = RequestStatus.REJECTED
+            self.metrics.incr("requests_oversized")
+        else:
+            self.queue.submit(req)
+
+    def warmup(self) -> float:
+        """Pre-compile every registered workload and pre-load its stage
+        constants (deploy-time work that must not count against request
+        deadlines — on the mesh backend the first execution pays XLA
+        compilation). Returns wall seconds spent."""
+        t0 = time.perf_counter()
+        scratch = MetricsRegistry(self.mem.n_partitions)
+        # deploy-time misses must not dilute the SERVING hit rates:
+        # point every cache at the scratch registry for the duration
+        saved_cc, self.compile_cache.metrics = self.compile_cache.metrics, \
+            scratch
+        saved_kc = None
+        if self.key_cache is not None:
+            saved_kc, self.key_cache.metrics = self.key_cache.metrics, \
+                scratch
+        try:
+            for name, w in self.workloads.items():
+                sched = self.compile_cache.get_schedule(
+                    w.trace, self.params, self.mem, self.mapper)
+                self.backend.execute(sched, Batch(name, [], [[]], 0.0),
+                                     key_cache=self.key_cache,
+                                     metrics=scratch, workload=name)
+        finally:
+            self.compile_cache.metrics = saved_cc
+            if saved_kc is not None:
+                self.key_cache.metrics = saved_kc
+        return time.perf_counter() - t0
+
+    def _execute_batch(self, batch: Batch, now: float) -> float:
+        sched = self.compile_cache.get_schedule(
+            self.workloads[batch.workload].trace, self.params, self.mem,
+            self.mapper)
+        service_s = self.backend.execute(
+            sched, batch, key_cache=self.key_cache, metrics=self.metrics,
+            workload=batch.workload)
+        done = now + service_s
+        for r in batch.requests:
+            r.completion_s = done
+            if r.deadline_s is not None and done > r.deadline_s:
+                r.status = RequestStatus.DEADLINE_MISS
+                self.metrics.incr("deadline_misses")
+                continue
+            r.status = RequestStatus.COMPLETED
+            self.metrics.request_latency.observe(r.latency())
+            self.metrics.incr("requests_completed")
+        self.metrics.batch_service.observe(service_s)
+        return service_s
+
+    # -- event loop ----------------------------------------------------------
+
+    def serve(self, arrivals: List[Request],
+              start_s: float = 0.0) -> MetricsRegistry:
+        """Drain a pre-generated arrival schedule (sorted by arrival_s).
+
+        Single-server semantics: the pipeline serves one batch at a
+        time; arrivals landing mid-service are admitted when it ends —
+        so saturation shows up as queue growth and latency, exactly
+        what the fig16 sweep measures.
+        """
+        pending = sorted(arrivals, key=lambda r: r.arrival_s)
+        i = 0
+        now = start_s
+        while i < len(pending) or len(self.queue):
+            while i < len(pending) and pending[i].arrival_s <= now:
+                self._admit(pending[i])
+                i += 1
+            batch = self.batcher.poll(now)
+            if batch is not None:
+                now += self._execute_batch(batch, now)
+                continue
+            # idle: jump to the next event
+            events = []
+            if i < len(pending):
+                events.append(pending[i].arrival_s)
+            t_fire = self.batcher.next_fire_time(now)
+            if t_fire is not None:
+                events.append(t_fire)
+            if not events:
+                break                  # only expired/unservable work left
+            now = max(math.nextafter(now, math.inf), min(events))
+        self.metrics.elapsed_s = max(self.metrics.elapsed_s, now - start_s)
+        return self.metrics

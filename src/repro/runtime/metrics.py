@@ -1,0 +1,149 @@
+"""Serving metrics: latency percentiles, throughput, cache hit rates,
+partition occupancy.
+
+Pure-python accumulators (no jax) so they work identically under the
+analytic (virtual-clock) and mesh (wall-clock) backends.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Optional
+
+
+class LatencyStats:
+    """Streaming latency accumulator with exact percentiles.
+
+    Samples are kept sorted (bisect insert) — serving smoke tests and
+    benchmarks see 1e2..1e5 samples, where O(n) insertion is fine and
+    exactness beats a sketch.
+    """
+
+    def __init__(self, name: str = "latency"):
+        self.name = name
+        self._sorted: List[float] = []
+        self._sum = 0.0
+
+    def observe(self, seconds: float) -> None:
+        bisect.insort(self._sorted, seconds)
+        self._sum += seconds
+
+    @property
+    def count(self) -> int:
+        return len(self._sorted)
+
+    @property
+    def mean(self) -> float:
+        return self._sum / len(self._sorted) if self._sorted else 0.0
+
+    def percentile(self, p: float) -> float:
+        """Exact p-th percentile (0 <= p <= 100), nearest-rank."""
+        if not self._sorted:
+            return 0.0
+        k = min(len(self._sorted) - 1,
+                max(0, int(round(p / 100.0 * (len(self._sorted) - 1)))))
+        return self._sorted[k]
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50)
+
+    @property
+    def p95(self) -> float:
+        return self.percentile(95)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99)
+
+    @property
+    def max(self) -> float:
+        return self._sorted[-1] if self._sorted else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {"count": self.count, "mean_s": self.mean,
+                "p50_s": self.p50, "p95_s": self.p95, "p99_s": self.p99,
+                "max_s": self.max}
+
+
+@dataclasses.dataclass
+class PartitionOccupancy:
+    """Busy-seconds per partition vs elapsed time — how evenly the
+    round-robin placement loads the banks/device-groups."""
+    n_partitions: int
+    busy_s: List[float] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.busy_s:
+            self.busy_s = [0.0] * self.n_partitions
+
+    def add(self, partition: int, seconds: float) -> None:
+        self.busy_s[partition % self.n_partitions] += seconds
+
+    def occupancy(self, elapsed_s: float) -> List[float]:
+        if elapsed_s <= 0:
+            return [0.0] * self.n_partitions
+        return [min(1.0, b / elapsed_s) for b in self.busy_s]
+
+    def mean_occupancy(self, elapsed_s: float) -> float:
+        occ = self.occupancy(elapsed_s)
+        return sum(occ) / len(occ) if occ else 0.0
+
+
+class MetricsRegistry:
+    """One object threaded through queue/batcher/keycache/executor."""
+
+    def __init__(self, n_partitions: int = 1):
+        self.request_latency = LatencyStats("request_latency")
+        self.queue_wait = LatencyStats("queue_wait")
+        self.batch_service = LatencyStats("batch_service")
+        self.occupancy = PartitionOccupancy(n_partitions)
+        self.counters: Dict[str, int] = {}
+        self.elapsed_s = 0.0
+
+    def incr(self, name: str, by: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + by
+
+    def count(self, name: str) -> int:
+        return self.counters.get(name, 0)
+
+    def hit_rate(self, prefix: str) -> float:
+        """hits / (hits + misses) for counters ``{prefix}_hits`` and
+        ``{prefix}_misses``."""
+        h, m = self.count(f"{prefix}_hits"), self.count(f"{prefix}_misses")
+        return h / (h + m) if h + m else 0.0
+
+    def throughput_rps(self) -> float:
+        done = self.count("requests_completed")
+        return done / self.elapsed_s if self.elapsed_s > 0 else 0.0
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "elapsed_s": self.elapsed_s,
+            "throughput_rps": self.throughput_rps(),
+            "latency": self.request_latency.summary(),
+            "queue_wait": self.queue_wait.summary(),
+            "batch_service": self.batch_service.summary(),
+            "keycache_hit_rate": self.hit_rate("keycache"),
+            "compile_cache_hit_rate": self.hit_rate("compile"),
+            "mean_partition_occupancy":
+                self.occupancy.mean_occupancy(self.elapsed_s),
+            "counters": dict(sorted(self.counters.items())),
+        }
+
+    def format_table(self) -> str:
+        s = self.summary()
+        lat = s["latency"]
+        lines = [
+            f"elapsed               {s['elapsed_s']:.3f} s",
+            f"throughput            {s['throughput_rps']:.1f} req/s",
+            f"latency p50/p95/p99   {lat['p50_s']*1e3:.2f} / "
+            f"{lat['p95_s']*1e3:.2f} / {lat['p99_s']*1e3:.2f} ms",
+            f"queue wait p50        {self.queue_wait.p50*1e3:.2f} ms",
+            f"keycache hit rate     {s['keycache_hit_rate']*100:.1f} %",
+            f"compile hit rate      {s['compile_cache_hit_rate']*100:.1f} %",
+            f"partition occupancy   {s['mean_partition_occupancy']*100:.1f} %",
+        ]
+        for k, v in s["counters"].items():
+            lines.append(f"{k:<21} {v}")
+        return "\n".join(lines)

@@ -1,0 +1,38 @@
+"""Synthetic FHE workload zoo shared by the serving CLI and benchmarks.
+
+One definition per program family; depth/width knobs parameterize the
+variants so the CLI smoke and the fig16 sweep can't drift apart.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+
+def make_helr_iter(rot_steps: Sequence[int] = (1, 2, 4, 8)):
+    """HELR-style logistic-regression iteration (the paper's deep
+    workload family): rotation tree for the inner product + cubic
+    sigmoid approximation. `rot_steps` sets the tree depth."""
+    def helr_iter(x, w, consts=None):
+        s = x * w
+        for k in rot_steps:
+            s = s + s.rotate(k)
+        a = s * consts["c1"]
+        b = s * s
+        c = b * s
+        return w + (a + c * consts["c3"]) * x
+    return helr_iter
+
+
+HELR_CONSTS: Tuple[str, ...] = ("c1", "c3")
+
+
+def lola_infer(x, consts=None):
+    """LoLa-style shallow inference: two plaintext-weight layers with a
+    square activation."""
+    h = x * consts["w1"]
+    h = h + h.rotate(1)
+    h = h * h
+    return h * consts["w2"]
+
+
+LOLA_CONSTS: Tuple[str, ...] = ("w1", "w2")

@@ -13,6 +13,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
+from repro.compat import set_mesh as compat_set_mesh
 import jax.numpy as jnp  # noqa: E402
 
 
@@ -24,8 +25,8 @@ def scenario_bconv(variant: str):
                                                  distributed_bconv)
     params = test_params(log_n=8, n_levels=7, dnum=2)  # 8 q-limbs
     ctx = CkksContext(params)
-    mesh = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 8)
     src = ctx.q_idx(7)              # 8 limbs -> 1 per device
     dst = ctx.p_idx()               # 8 special? alpha=4 -> pad to 8
     # need |dst| divisible by 8 too: use first 8 q primes as a synthetic dst
@@ -44,8 +45,8 @@ def scenario_bconv(variant: str):
 
 def scenario_pipeline():
     from repro.fhe_dist.pipeline_exec import run_load_save_pipeline
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh as _make_mesh
+    mesh = _make_mesh((8,), ("data",))
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.normal(size=(5, 16, 32)).astype(np.float32))
     fns_r1 = [lambda v, k=k: v * (k + 1) for k in range(8)]
@@ -86,10 +87,10 @@ def scenario_limb_sharded_hmul():
     ct2 = encr.encrypt_sk(Plaintext(enc.encode(v2, scale, L), L, scale), sk)
     want = np.asarray(ops.hmul(ctx, ct1, ct2, rk).data)
 
-    mesh = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 8)
     limb = NamedSharding(mesh, P(None, "model", None))
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         d1 = jax.device_put(ct1.data, limb)
         d2 = jax.device_put(ct2.data, limb)
         out = ops.hmul(ctx, Ciphertext(d1, L, scale),

@@ -4,7 +4,9 @@ u32-only primitive layer."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.params import find_2nth_root, find_ntt_primes
 from repro.kernels import common, ops, ref

@@ -2,7 +2,9 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import modarith as ma
 from repro.core import ntt as nttm

@@ -54,8 +54,8 @@ def test_elastic_reshard_roundtrip(tmp_path):
     from jax.sharding import NamedSharding, PartitionSpec as P
     t = _tree()
     ckpt.save_checkpoint(str(tmp_path), 1, t)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
     shardings = jax.tree.map(
         lambda x: NamedSharding(mesh, P(*([None] * x.ndim))), t)
     restored, _ = ckpt.restore_checkpoint(str(tmp_path), t,
@@ -135,8 +135,8 @@ def test_compressed_psum_single_pod():
     from jax.sharding import Mesh
     from repro.train.compress import (compressed_pod_mean,
                                       init_error_feedback)
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh as _make_mesh
+    mesh = _make_mesh((1,), ("pod",))
     g = {"w": jnp.asarray(np.linspace(-1, 1, 64,
                                       dtype=np.float32))[None]}  # (1, 64)
     err = init_error_feedback(g)

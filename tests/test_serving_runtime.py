@@ -1,0 +1,373 @@
+"""repro.runtime serving stack: queue admission/deadlines, batcher
+slot-packing invariants, keycache eviction under the const_bytes
+budget, compile-cache hits, and an end-to-end smoke through
+executor.serve on the analytic backend."""
+import numpy as np
+import pytest
+
+from repro.core.params import test_params as _test_params
+from repro.core.pipeline import MemoryModel
+from repro.runtime import (AnalyticBackend, BatchPolicy, KeyCache,
+                           PipelinedExecutor, Request, RequestStatus,
+                           SlotBatcher)
+from repro.runtime.batcher import pack_slot_groups
+from repro.runtime.compile_cache import CompileCache, trace_fingerprint
+from repro.runtime.metrics import LatencyStats
+from repro.runtime.queue import AdmissionQueue
+
+
+def _prog(x, w, consts=None):
+    s = x * w
+    for k in (1, 2, 4):
+        s = s + s.rotate(k)
+    return s * consts["c1"] + x
+
+
+def _req(q, i, workload="prog", tenant="t0", t=0.0, slots=1, deadline=None):
+    return Request(q.next_request_id(), tenant, workload, arrival_s=t,
+                   slots_needed=slots, deadline_s=deadline)
+
+
+def _executor(cache_bytes=64 * 2 ** 20, max_batch=4, max_wait_s=2e-3):
+    params = _test_params(log_n=10, n_levels=8, dnum=2)
+    mem = MemoryModel(n_partitions=4, partition_bytes=8 * 2 ** 20)
+    kc = KeyCache(cache_bytes, load_bw=mem.load_bw) if cache_bytes else None
+    ex = PipelinedExecutor(
+        params, mem, key_cache=kc,
+        policy=BatchPolicy(slots_per_ct=params.slots, max_batch=max_batch,
+                           max_wait_s=max_wait_s))
+    ex.register("prog", _prog, 2, const_names=("c1",), start_level=7)
+    return ex
+
+
+# ---------------------------------------------------------------------------
+# queue
+# ---------------------------------------------------------------------------
+
+def test_admission_rejects_when_tenant_full():
+    q = AdmissionQueue(max_depth_per_tenant=2)
+    assert q.submit(_req(q, 0))
+    assert q.submit(_req(q, 1))
+    r = _req(q, 2)
+    assert not q.submit(r)
+    assert r.status is RequestStatus.REJECTED
+    assert q.metrics.count("requests_rejected") == 1
+    # other tenants unaffected
+    assert q.submit(_req(q, 3, tenant="t1"))
+
+
+def test_deadline_expired_requests_dropped_at_dequeue():
+    q = AdmissionQueue()
+    q.submit(_req(q, 0, t=0.0, deadline=1.0))
+    q.submit(_req(q, 1, t=0.0, deadline=10.0))
+    got = q.take(now=5.0, workload="prog", max_requests=8)
+    assert len(got) == 1
+    assert got[0].deadline_s == 10.0
+    assert q.metrics.count("deadline_misses") == 1
+
+
+def test_mid_queue_expired_request_never_batched():
+    """Regression: expiry was only enforced at the queue front, so an
+    expired request behind a live one of another workload could still
+    be dequeued and burn a pipeline batch."""
+    q = AdmissionQueue()
+    q.submit(_req(q, 0, workload="y", t=0.0))                  # live front
+    q.submit(_req(q, 1, workload="x", t=0.0, deadline=1.0))    # expires
+    assert q.take(now=5.0, workload="x", max_requests=8) == []
+    assert q.metrics.count("deadline_misses") == 1
+    assert q.pending_demand(5.0, "y") == (1, 1)                # live kept
+
+
+def test_take_round_robins_tenants():
+    q = AdmissionQueue()
+    for i in range(6):
+        q.submit(_req(q, i, tenant=f"t{i % 3}", t=float(i)))
+    got = q.take(now=10.0, workload="prog", max_requests=3)
+    assert {r.tenant for r in got} == {"t0", "t1", "t2"}
+
+
+# ---------------------------------------------------------------------------
+# batcher: slot-packing invariants
+# ---------------------------------------------------------------------------
+
+def test_pack_respects_slot_capacity_and_max_groups():
+    q = AdmissionQueue()
+    rng = np.random.default_rng(0)
+    reqs = [_req(q, i, slots=int(rng.integers(1, 60))) for i in range(40)]
+    groups, overflow = pack_slot_groups(reqs, slots_per_ct=64, max_groups=5)
+    assert len(groups) <= 5
+    for g in groups:
+        assert sum(r.slots_needed for r in g) <= 64
+    packed = {r.request_id for g in groups for r in g}
+    assert packed | {r.request_id for r in overflow} == \
+        {r.request_id for r in reqs}
+    assert packed & {r.request_id for r in overflow} == set()
+
+
+def test_pack_oversized_request_overflows():
+    q = AdmissionQueue()
+    groups, overflow = pack_slot_groups(
+        [_req(q, 0, slots=100)], slots_per_ct=64, max_groups=4)
+    assert groups == [] and len(overflow) == 1
+
+
+def test_batcher_never_mixes_workloads():
+    q = AdmissionQueue()
+    policy = BatchPolicy(slots_per_ct=64, max_batch=4, max_wait_s=0.0)
+    b = SlotBatcher(q, policy)
+    q.submit(_req(q, 0, workload="a", t=0.0))
+    q.submit(_req(q, 1, workload="b", t=0.0))
+    q.submit(_req(q, 2, workload="a", t=0.0))
+    batch = b.poll(now=1.0)
+    assert batch is not None
+    assert {r.workload for r in batch.requests} == {batch.workload}
+    batch2 = b.poll(now=1.0)
+    assert batch2 is not None and batch2.workload != batch.workload
+
+
+def test_batcher_waits_then_fires_on_max_wait():
+    q = AdmissionQueue()
+    policy = BatchPolicy(slots_per_ct=64, max_batch=4, max_wait_s=1e-3)
+    b = SlotBatcher(q, policy)
+    q.submit(_req(q, 0, t=0.0))
+    assert b.poll(now=0.0) is None                  # not full, not waited
+    assert b.next_fire_time(0.0) == pytest.approx(1e-3)
+    batch = b.poll(now=2e-3)
+    assert batch is not None and batch.n_requests == 1
+
+
+def test_batcher_fires_immediately_when_capacity_reached():
+    q = AdmissionQueue()
+    policy = BatchPolicy(slots_per_ct=4, max_batch=2, max_wait_s=10.0)
+    b = SlotBatcher(q, policy)
+    for i in range(8):
+        q.submit(_req(q, i, slots=1, t=0.0))
+    batch = b.poll(now=0.0)                          # 8 slots = capacity
+    assert batch is not None
+    assert batch.n_ciphertexts <= 2
+    for g in batch.slot_groups:
+        assert sum(r.slots_needed for r in g) <= 4
+
+
+# ---------------------------------------------------------------------------
+# keycache
+# ---------------------------------------------------------------------------
+
+def test_keycache_hit_miss_and_load_time():
+    kc = KeyCache(100, load_bw=100.0)
+    _, hit, load = kc.get_or_load("a", 50)
+    assert not hit and load == pytest.approx(0.5)
+    _, hit, load = kc.get_or_load("a", 50)
+    assert hit and load == 0.0
+
+
+def test_keycache_lru_eviction_under_budget():
+    kc = KeyCache(100)
+    kc.get_or_load("a", 40)
+    kc.get_or_load("b", 40)
+    kc.get_or_load("a", 40)                 # touch a -> b is LRU
+    kc.get_or_load("c", 40)                 # evicts b
+    assert "a" in kc and "c" in kc and "b" not in kc
+    assert kc.used_bytes <= 100
+    assert kc.metrics.count("keycache_evictions") == 1
+
+
+def test_keycache_entry_larger_than_capacity_never_retained():
+    kc = KeyCache(100)
+    _, hit, load = kc.get_or_load("huge", 200)
+    assert not hit and len(kc) == 0
+    _, hit, _ = kc.get_or_load("huge", 200)
+    assert not hit                           # still a miss: uncacheable
+    assert kc.metrics.count("keycache_uncacheable") == 2
+
+
+def test_keycache_eviction_mirrors_stage_const_bytes():
+    """Eviction keyed by the mapper's const_bytes accounting: capacity
+    for exactly two stages' constants keeps the two hottest resident."""
+    ex = _executor(cache_bytes=0)
+    sched = ex.compile_cache.get_schedule(
+        ex.workloads["prog"].trace, ex.params, ex.mem)
+    sizes = [st.const_bytes for st in sched.stages if st.const_bytes > 0]
+    assert sizes, "schedule should carry constant footprints"
+    kc = KeyCache(sizes[0] * 2)
+    kc.get_or_load(("prog", "stage", 0), sizes[0])
+    _, hit, _ = kc.get_or_load(("prog", "stage", 0), sizes[0])
+    assert hit
+    assert kc.used_bytes <= kc.capacity_bytes
+
+
+def test_keycache_invalidate_prefix():
+    kc = KeyCache(1000)
+    kc.get_or_load(("w1", "stage", 0), 10)
+    kc.get_or_load(("w1", "stage", 1), 10)
+    kc.get_or_load(("w2", "stage", 0), 10)
+    assert kc.invalidate_prefix(("w1",)) == 2
+    assert ("w2", "stage", 0) in kc and kc.used_bytes == 10
+
+
+# ---------------------------------------------------------------------------
+# compile cache
+# ---------------------------------------------------------------------------
+
+def test_trace_fingerprint_structural():
+    from repro.core.trace import infer_levels, trace_program
+    t1 = trace_program(_prog, 2, const_names=("c1",))
+    t2 = trace_program(_prog, 2, const_names=("c1",))
+    infer_levels(t1, 7)
+    infer_levels(t2, 7)
+    assert trace_fingerprint(t1) == trace_fingerprint(t2)
+
+    def other(x, w, consts=None):
+        return (x * w).rotate(2) + x * consts["c1"]
+    t3 = trace_program(other, 2, const_names=("c1",))
+    infer_levels(t3, 7)
+    assert trace_fingerprint(t3) != trace_fingerprint(t1)
+
+
+def test_compile_cache_hits_same_program():
+    from repro.core.trace import infer_levels, trace_program
+    params = _test_params(log_n=10, n_levels=8, dnum=2)
+    mem = MemoryModel(n_partitions=4)
+    cc = CompileCache()
+    t1 = trace_program(_prog, 2, const_names=("c1",))
+    infer_levels(t1, 7)
+    t2 = trace_program(_prog, 2, const_names=("c1",))
+    infer_levels(t2, 7)
+    s1 = cc.get_schedule(t1, params, mem)
+    s2 = cc.get_schedule(t2, params, mem)
+    assert s1 is s2
+    assert cc.metrics.count("compile_hits") == 1
+    assert cc.metrics.count("compile_misses") == 1
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_latency_percentiles_exact():
+    ls = LatencyStats()
+    for v in np.random.default_rng(0).permutation(np.arange(1, 101)):
+        ls.observe(float(v))
+    assert ls.p50 == pytest.approx(50.0, abs=1.0)
+    assert ls.p99 == pytest.approx(99.0, abs=1.0)
+    assert ls.max == 100.0 and ls.count == 100
+
+
+# ---------------------------------------------------------------------------
+# end-to-end smoke (analytic backend)
+# ---------------------------------------------------------------------------
+
+def test_executor_end_to_end_smoke():
+    ex = _executor()
+    rng = np.random.default_rng(3)
+    t, arrivals = 0.0, []
+    for i in range(50):
+        t += float(rng.exponential(1e-3))
+        arrivals.append(Request(
+            ex.queue.next_request_id(), f"tenant{i % 3}", "prog",
+            arrival_s=t, slots_needed=int(rng.integers(1, 64))))
+    m = ex.serve(arrivals)
+    s = m.summary()
+    assert m.count("requests_completed") == 50
+    assert s["throughput_rps"] > 0
+    assert s["latency"]["p99_s"] >= s["latency"]["p50_s"] > 0
+    assert s["keycache_hit_rate"] > 0          # cross-batch residency
+    assert s["compile_cache_hit_rate"] > 0     # schedule reuse
+    for r in arrivals:
+        assert r.status is RequestStatus.COMPLETED
+        assert r.completion_s >= r.arrival_s
+
+
+def test_warmup_does_not_dilute_serving_hit_rates():
+    """Regression: warmup's compulsory misses used to land in the
+    serving registry; after warmup every serving access is a hit."""
+    ex = _executor()
+    ex.warmup()
+    assert ex.metrics.count("keycache_misses") == 0
+    assert ex.metrics.count("compile_misses") == 0
+    arrivals = [Request(ex.queue.next_request_id(), "t0", "prog",
+                        arrival_s=0.0, slots_needed=8) for _ in range(8)]
+    m = ex.serve(arrivals)
+    assert m.count("keycache_misses") == 0
+    assert m.hit_rate("keycache") == 1.0
+
+
+def test_executor_keycache_improves_service_time():
+    """Same arrival stream, cache on vs off: cached run must finish the
+    backlog strictly faster (constants stream once, not per batch)."""
+    def run(cache_bytes):
+        ex = _executor(cache_bytes=cache_bytes)
+        arrivals = [Request(ex.queue.next_request_id(), "t0", "prog",
+                            arrival_s=0.0, slots_needed=256)
+                    for _ in range(40)]
+        m = ex.serve(arrivals)
+        return m.elapsed_s
+
+    assert run(cache_bytes=256 * 2 ** 20) < run(cache_bytes=0)
+
+
+def test_executor_deadline_misses_counted():
+    ex = _executor(max_wait_s=0.5)
+    arrivals = [Request(ex.queue.next_request_id(), "t0", "prog",
+                        arrival_s=0.0, deadline_s=1e-9)]
+    m = ex.serve(arrivals)
+    assert m.count("deadline_misses") == 1
+    assert m.count("requests_completed") == 0
+
+
+def test_executor_rejects_oversized_request():
+    ex = _executor()
+    r = ex.submit("t0", "prog", now=0.0,
+                  slots_needed=ex.policy.slots_per_ct + 1)
+    assert r.status is RequestStatus.REJECTED
+    assert ex.metrics.count("requests_oversized") == 1
+
+
+def test_serve_rejects_oversized_instead_of_hanging():
+    """Regression: an unservable request admitted via serve()'s arrival
+    path used to spin the event loop forever."""
+    ex = _executor()
+    r = Request(ex.queue.next_request_id(), "t0", "prog", arrival_s=0.0,
+                slots_needed=ex.policy.capacity_slots + 1)
+    m = ex.serve([r])                       # must return, not hang
+    assert r.status is RequestStatus.REJECTED
+    assert m.count("requests_oversized") == 1
+
+
+def test_mesh_pad_smaller_than_batch_keeps_all_groups():
+    """Regression: pad_batch_to below the batch's ciphertext count used
+    to index past the packed stack (IndexError / silent data drop)."""
+    from repro.runtime.batcher import Batch
+    from repro.runtime.executor import MeshBackend
+
+    be = MeshBackend(slots_per_ct=8, pad_batch_to=2)
+    q = AdmissionQueue()
+    reqs = [_req(q, i, slots=8) for i in range(4)]
+    for i, r in enumerate(reqs):
+        r.payload = np.full(8, float(i + 1), dtype=np.float32)
+    batch = Batch("prog", reqs, [[r] for r in reqs], 0.0)
+    n_micro = max(be.pad_batch_to or 0, batch.n_ciphertexts, 1)
+    x = np.asarray(be._pack(batch, n_micro))
+    assert x.shape == (4, 8)
+    for i in range(4):
+        assert (x[i] == i + 1).all()       # every group's data packed
+
+
+def test_mesh_pack_tolerates_opaque_payload():
+    """Regression: a Ciphertext (non-array) payload crashed _pack."""
+    from repro.runtime.batcher import Batch
+    from repro.runtime.executor import MeshBackend
+
+    class Opaque:
+        pass
+
+    be = MeshBackend(slots_per_ct=16)
+    q = AdmissionQueue()
+    r1 = _req(q, 0, slots=4)
+    r1.payload = Opaque()
+    r2 = _req(q, 1, slots=4)
+    r2.payload = np.arange(4, dtype=np.float32)
+    x = np.asarray(be._pack(Batch("prog", [r1, r2], [[r1, r2]], 0.0), 1))
+    assert x.shape == (1, 16)
+    np.testing.assert_array_equal(x[0, 4:8], [0, 1, 2, 3])
+    assert (x[0, :4] == 0).all()            # opaque slots left zero
