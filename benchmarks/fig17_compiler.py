@@ -1,0 +1,120 @@
+"""Fig. 17 (new figure - compiler ablation): per-workload analytic
+latency through the load-save pipeline, unoptimized vs per-pass-
+cumulative vs the full `repro.compiler` pipeline.
+
+Passes accumulate in the manager's canonical order (dce, fold,
+rotation, cse, lazy_rescale), always on top of bootstrap insertion —
+the feasibility floor that lets a level-exhausting trace (poly) compile
+and run at all instead of dying in `infer_levels`. The delta of each
+column over the previous one is that pass's contribution; the last
+column over the first is the headline end-to-end win (rotation-heavy
+matvec is the showcase: BSGS turns n keyswitches into ~2*sqrt(n)).
+
+    PYTHONPATH=src python -m benchmarks.fig17_compiler [--smoke]
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/run.py contract)
+and appends one JSON record per (workload, stage) to
+``benchmarks/results/fig17_compiler.jsonl`` for report.py.
+"""
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import row
+from repro.compiler import PASS_ORDER, PassConfig, optimize_trace
+from repro.core.params import CkksParams, test_params
+from repro.core.pipeline import MemoryModel, generate_load_save_pipeline
+from repro.core.trace import LevelBudgetExhausted, trace_program
+from repro.runtime.workloads import (HELR_CONSTS, LOLA_CONSTS, lola_infer,
+                                     make_helr_iter, make_matvec,
+                                     make_poly_eval, matvec_consts,
+                                     poly_consts)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# cumulative stages, derived from the manager's canonical pass order so
+# the ablation never drifts from the pipeline ("unopt" is bootstrap-only:
+# the minimum that makes every workload runnable)
+_STAGES = ["unopt"] + [f"+{p.name}" for p in PASS_ORDER
+                       if p.name != "bootstrap"]
+
+
+def _workloads(smoke: bool):
+    dim = 16 if smoke else 32
+    deg = 12 if smoke else 24
+    return {
+        "helr": (make_helr_iter(), 2, HELR_CONSTS),
+        "lola": (lola_infer, 1, LOLA_CONSTS),
+        f"matvec{dim}": (make_matvec(dim), 1, matvec_consts(dim)),
+        f"poly{deg}": (make_poly_eval(deg), 1, poly_consts(deg)),
+    }
+
+
+def _setting(smoke: bool):
+    if smoke:
+        params = test_params(log_n=10, n_levels=8, dnum=2)
+        mem = MemoryModel(n_partitions=4, partition_bytes=8 * 2 ** 20)
+        return params, mem, 7
+    params = CkksParams(log_n=15, log_scale=28, n_levels=15, dnum=3,
+                        first_mod_bits=31, scale_mod_bits=28,
+                        special_mod_bits=31)
+    # partitions sized so a keyswitch stage's evk fits the const budget:
+    # the load-save regime (§IV-F) where constants stream once per round
+    # and the compiler's rotation-count reduction shows through (with
+    # overflowing stages the per-round evk reload masks everything)
+    mem = MemoryModel(n_partitions=8, partition_bytes=256 * 2 ** 20,
+                      load_bw=64e9, modmul_throughput=8e12,
+                      transfer_bw=256e9)
+    return params, mem, 12
+
+
+def main(argv=()) -> None:
+    # argv defaults to () so benchmarks/run.py can call main() without
+    # this parser swallowing run.py's own flags
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small params + workloads, fast CI check")
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args(list(argv))
+
+    params, mem, start = _setting(args.smoke)
+    os.makedirs(RESULTS, exist_ok=True)
+    out_path = os.path.join(RESULTS, "fig17_compiler.jsonl")
+    records = []
+    for wname, (fn, n_in, consts) in _workloads(args.smoke).items():
+        trace = trace_program(fn, n_in, const_names=consts)
+        base_s = None
+        enabled = ["bootstrap"]
+        for stage in _STAGES:
+            if stage != "unopt":
+                enabled.append(stage[1:])
+            cfg = PassConfig(start_level=start).with_passes(tuple(enabled))
+            try:
+                opt, report = optimize_trace(trace, params, cfg)
+            except LevelBudgetExhausted as e:
+                row(f"fig17_{wname}_{stage}", 0.0, f"infeasible: {e}")
+                continue
+            sched = generate_load_save_pipeline(opt, params, mem)
+            lat = sched.total_latency(args.batch)
+            if base_s is None:
+                base_s = lat
+            n_rot = sum(1 for o in opt.ops if o.kind == "rotate")
+            n_boot = sum(1 for o in opt.ops if o.kind == "bootstrap")
+            derived = (f"{len(opt.ops)}ops {n_rot}rot "
+                       f"{n_boot}boot speedup={base_s / lat:.2f}x")
+            row(f"fig17_{wname}_{stage}", lat * 1e6, derived)
+            records.append({
+                "workload": wname, "stage": stage,
+                "latency_s": lat, "n_ops": len(opt.ops),
+                "n_rotations": n_rot, "n_bootstraps": n_boot,
+                "speedup_vs_unopt": base_s / lat,
+                "smoke": bool(args.smoke),
+            })
+    with open(out_path, "w") as f:
+        for r in records:
+            f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

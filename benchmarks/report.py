@@ -66,6 +66,29 @@ def roofline_table():
                   f"{r.get('error','')[:40]} | | | | | | |")
 
 
+def fig17_table():
+    path = os.path.join(RESULTS, "fig17_compiler.jsonl")
+    if not os.path.exists(path):
+        return
+    recs = [json.loads(line) for line in open(path)]
+    print("\n### Fig. 17 — compiler ablation (cumulative passes, "
+          "analytic latency)\n")
+    print("| workload | stage | ops | rotations | bootstraps | "
+          "latency_ms | speedup vs unopt |")
+    print("|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(f"| {r['workload']} | {r['stage']} | {r['n_ops']} | "
+              f"{r['n_rotations']} | {r['n_bootstraps']} | "
+              f"{r['latency_s'] * 1e3:.3f} | "
+              f"{r['speedup_vs_unopt']:.2f}x |")
+    # last record per workload = the full cumulative pipeline
+    full = list({r["workload"]: r for r in recs}.values())
+    if full:
+        best = max(full, key=lambda r: r["speedup_vs_unopt"])
+        print(f"\nBest end-to-end: {best['workload']} at "
+              f"{best['speedup_vs_unopt']:.2f}x.")
+
+
 def pick_hillclimb():
     recs = [r for r in load("roofline.jsonl") if r["status"] == "ok"]
     by_rf = sorted((r for r in recs if r["shape"] != "long_500k"),
@@ -88,5 +111,7 @@ if __name__ == "__main__":
         dryrun_table()
     if what in ("all", "roofline"):
         roofline_table()
+    if what in ("all", "fig17"):
+        fig17_table()
     if what in ("all", "pick"):
         pick_hillclimb()

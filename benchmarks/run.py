@@ -12,7 +12,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 MODULES = ["fig1_bandwidth", "fig12_workloads", "fig13_breakdown",
-           "fig14_kernels", "fig15_ablations", "fig16_serving"]
+           "fig14_kernels", "fig15_ablations", "fig16_serving",
+           "fig17_compiler"]
 
 
 def main() -> None:

@@ -18,6 +18,21 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.params import CkksParams
 
 
+class LevelBudgetExhausted(Exception):
+    """A trace consumed more multiplicative depth than the modulus chain
+    provides. Carries the failing op so the compiler's bootstrap-insertion
+    pass (repro.compiler.passes.BootstrapInsertion) — or user code — can
+    catch it and rewrite instead of dying."""
+
+    def __init__(self, op_index: int, kind: str, level: int):
+        self.op_index = op_index
+        self.kind = kind
+        self.level = level
+        super().__init__(
+            f"level budget exhausted at op {op_index} ({kind}): "
+            f"level {level} < 0")
+
+
 @dataclasses.dataclass
 class FheOp:
     idx: int
@@ -114,7 +129,12 @@ def infer_levels(trace: FheTrace, start_level: int,
                  bootstrap_to: Optional[int] = None) -> None:
     """Annotate each op with the level of its OUTPUT ciphertext.
 
-    hmul/pmul include their rescale (level-1); hadd aligns to min level.
+    hmul/pmul include their rescale (level-1) unless marked
+    ``meta["lazy"]`` (the compiler's lazy-rescale pass defers the divide
+    to an explicit ``rescale`` op downstream); hadd aligns to min level.
+
+    Raises LevelBudgetExhausted (not a bare assert) when the program is
+    deeper than the chain, so bootstrap insertion can catch and rewrite.
     """
     lv: Dict[int, int] = {}
     for op in trace.ops:
@@ -122,7 +142,7 @@ def infer_levels(trace: FheTrace, start_level: int,
             lv[op.idx] = start_level
         elif op.kind in ("hmul", "pmul"):
             base = min(lv[a] for a in op.args)
-            lv[op.idx] = base - 1
+            lv[op.idx] = base if op.meta.get("lazy") else base - 1
         elif op.kind in ("hadd", "hsub", "padd"):
             lv[op.idx] = min(lv[a] for a in op.args)
         elif op.kind in ("rotate", "conjugate"):
@@ -135,7 +155,8 @@ def infer_levels(trace: FheTrace, start_level: int,
         else:
             raise ValueError(op.kind)
         op.level = lv[op.idx]
-        assert op.level >= 0, f"level budget exhausted at op {op.idx} ({op.kind})"
+        if op.level < 0:
+            raise LevelBudgetExhausted(op.idx, op.kind, op.level)
 
 
 # ---------------------------------------------------------------------------
@@ -211,11 +232,21 @@ def op_cost(params: CkksParams, op: FheOp) -> OpCost:
                       io_bytes=ct_bytes(params, l),
                       out_bytes=ct_bytes(params, l))
     if op.kind == "pmul":
+        if op.meta.get("lazy"):          # no rescale: output stays at l
+            return OpCost(modmuls=2 * lp,
+                          const_bytes=ct_bytes(params, l) // 2,
+                          io_bytes=ct_bytes(params, l),
+                          out_bytes=ct_bytes(params, l))
         c = OpCost(modmuls=2 * lp, const_bytes=ct_bytes(params, l + 1) // 2,
                    io_bytes=ct_bytes(params, l + 1),
                    out_bytes=ct_bytes(params, l))
         return c + rescale_cost(params, l + 1)
     if op.kind == "hmul":
+        if op.meta.get("lazy"):          # tensor+relin only, at level l
+            c = OpCost(modmuls=4 * lp,
+                       io_bytes=2 * ct_bytes(params, l),
+                       out_bytes=ct_bytes(params, l))
+            return c + keyswitch_cost(params, l)
         c = OpCost(modmuls=4 * (l + 2),
                    io_bytes=2 * ct_bytes(params, l + 1),
                    out_bytes=ct_bytes(params, l))

@@ -16,24 +16,33 @@ import argparse
 
 import numpy as np
 
+from repro.compiler import PassConfig
 from repro.core.params import CkksParams, test_params
 from repro.core.pipeline import MemoryModel
+from repro.core.trace import LevelBudgetExhausted
 from repro.runtime import (AnalyticBackend, BatchPolicy, KeyCache,
                            MeshBackend, PipelinedExecutor, Request)
 
 
-from repro.runtime.workloads import (HELR_CONSTS, LOLA_CONSTS,
-                                     lola_infer, make_helr_iter)
+from repro.runtime.workloads import (HELR_CONSTS, LOLA_CONSTS, lola_infer,
+                                     make_helr_iter, make_matvec,
+                                     make_poly_eval, matvec_consts,
+                                     poly_consts)
 
 WORKLOADS = {
     "helr": (make_helr_iter(), 2, HELR_CONSTS),
     "lola": (lola_infer, 1, LOLA_CONSTS),
+    # rotation-heavy: the compiler's BSGS + lazy-rescale showcase
+    "matvec": (make_matvec(16), 1, matvec_consts(16)),
+    # deeper than the smoke start level: needs bootstrap insertion
+    "poly": (make_poly_eval(12), 1, poly_consts(12)),
 }
 
 
 def build_executor(params: CkksParams, mem: MemoryModel, *,
                    backend_name: str, max_batch: int, max_wait_s: float,
-                   cache_bytes: int, start_level: int) -> PipelinedExecutor:
+                   cache_bytes: int, start_level: int,
+                   opt: bool = True) -> PipelinedExecutor:
     policy = BatchPolicy(slots_per_ct=params.slots, max_batch=max_batch,
                          max_wait_s=max_wait_s)
     key_cache = (KeyCache(cache_bytes, load_bw=mem.load_bw)
@@ -44,10 +53,16 @@ def build_executor(params: CkksParams, mem: MemoryModel, *,
     else:
         backend = AnalyticBackend(mem)
     ex = PipelinedExecutor(params, mem, backend=backend, policy=policy,
-                           key_cache=key_cache)
+                           key_cache=key_cache,
+                           pass_config=PassConfig() if opt else None)
     for name, (fn, n_in, consts) in WORKLOADS.items():
-        ex.register(name, fn, n_in, const_names=consts,
-                    start_level=start_level)
+        try:
+            ex.register(name, fn, n_in, const_names=consts,
+                        start_level=start_level)
+        except LevelBudgetExhausted:
+            print(f"skipping workload {name!r}: deeper than "
+                  f"start_level={start_level} and --no-opt disables "
+                  f"automatic bootstrap insertion")
     return ex
 
 
@@ -116,6 +131,11 @@ def main() -> None:
                     help="key cache capacity; 0 disables the cache")
     ap.add_argument("--no-encrypt", action="store_true",
                     help="skip real CKKS payload encryption at ingest")
+    ap.add_argument("--opt", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the optimizing trace compiler "
+                         "(repro.compiler) before pipeline mapping; "
+                         "--no-opt serves every trace verbatim")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -134,7 +154,7 @@ def main() -> None:
                         max_batch=args.max_batch,
                         max_wait_s=args.max_wait_ms * 1e-3,
                         cache_bytes=args.cache_mb * 2 ** 20,
-                        start_level=start_level)
+                        start_level=start_level, opt=args.opt)
     arrivals = synth_arrivals(
         ex, n_tenants=args.tenants, n_requests=args.requests,
         rate_rps=args.rate, seed=args.seed,
@@ -143,7 +163,8 @@ def main() -> None:
 
     print(f"serving {len(arrivals)} requests from {args.tenants} tenants "
           f"({args.backend} backend, key cache "
-          f"{'off' if ex.key_cache is None else f'{args.cache_mb}MiB'})")
+          f"{'off' if ex.key_cache is None else f'{args.cache_mb}MiB'}, "
+          f"compiler {'on' if args.opt else 'off'})")
     warm_s = ex.warmup()
     print(f"warmup (compile + key preload): {warm_s:.2f} s")
     m = ex.serve(arrivals)

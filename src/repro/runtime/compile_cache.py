@@ -12,6 +12,7 @@ from __future__ import annotations
 import hashlib
 from typing import Callable, Dict, Optional, Tuple
 
+from repro.compiler import PassConfig, optimize_trace
 from repro.core.params import CkksParams
 from repro.core.pipeline import (MemoryModel, PipelineSchedule,
                                  generate_load_save_pipeline)
@@ -61,14 +62,23 @@ class CompileCache:
                      mem: MemoryModel,
                      mapper: Callable[..., PipelineSchedule]
                      = generate_load_save_pipeline,
+                     pass_config: Optional[PassConfig] = None,
                      **mapper_kwargs) -> PipelineSchedule:
+        """Optionally run the optimizing compiler (repro.compiler) on the
+        trace before mapping. `pass_config` participates in the cache
+        key, so opt and no-opt schedules of one workload — or two
+        different pass selections — never collide."""
         key = (trace_fingerprint(trace), _params_key(params), _mem_key(mem),
                getattr(mapper, "__name__", repr(mapper)),
+               pass_config.key() if pass_config is not None else None,
                tuple(sorted(mapper_kwargs.items())))
         hit = key in self._cache
         if hit:
             self.metrics.incr("compile_hits")
         else:
             self.metrics.incr("compile_misses")
+            if pass_config is not None:
+                trace, _report = optimize_trace(trace, params, pass_config)
+                self.metrics.incr("traces_optimized")
             self._cache[key] = mapper(trace, params, mem, **mapper_kwargs)
         return self._cache[key]

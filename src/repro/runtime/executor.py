@@ -24,10 +24,12 @@ import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.compiler import PassConfig
 from repro.core.params import CkksParams
 from repro.core.pipeline import (MemoryModel, PipelineSchedule,
                                  generate_load_save_pipeline)
-from repro.core.trace import FheTrace, infer_levels, trace_program
+from repro.core.trace import (FheTrace, LevelBudgetExhausted, infer_levels,
+                              trace_program)
 from repro.runtime.batcher import Batch, BatchPolicy, SlotBatcher
 from repro.runtime.compile_cache import CompileCache
 from repro.runtime.keycache import KeyCache
@@ -217,7 +219,8 @@ class PipelinedExecutor:
                  key_cache: Optional[KeyCache] = None,
                  max_depth_per_tenant: int = 256,
                  mapper: Callable[..., PipelineSchedule]
-                 = generate_load_save_pipeline):
+                 = generate_load_save_pipeline,
+                 pass_config: Optional[PassConfig] = None):
         self.params = params
         self.mem = mem
         self.metrics = MetricsRegistry(n_partitions=mem.n_partitions)
@@ -234,6 +237,9 @@ class PipelinedExecutor:
             key_cache.metrics = self.metrics   # one registry for all parts
         self.compile_cache = CompileCache(self.metrics)
         self.mapper = mapper
+        # optimizing compiler (repro.compiler) between capture and the
+        # mapper; None serves every trace verbatim
+        self.pass_config = pass_config
         self.workloads: Dict[str, Workload] = {}
 
     # -- workload registry ---------------------------------------------------
@@ -242,7 +248,14 @@ class PipelinedExecutor:
                  const_names: Sequence[str] = (),
                  start_level: int = 10) -> Workload:
         trace = trace_program(fn, n_inputs, const_names)
-        infer_levels(trace, start_level=start_level)
+        try:
+            infer_levels(trace, start_level=start_level)
+        except LevelBudgetExhausted:
+            # deeper than the chain: admissible only when the compiler's
+            # bootstrap-insertion pass will rewrite it at compile time
+            # (inputs keep their level so the compiler knows the start)
+            if not (self.pass_config and self.pass_config.bootstrap):
+                raise
         w = Workload(name, trace)
         self.workloads[name] = w
         return w
@@ -291,7 +304,8 @@ class PipelinedExecutor:
         try:
             for name, w in self.workloads.items():
                 sched = self.compile_cache.get_schedule(
-                    w.trace, self.params, self.mem, self.mapper)
+                    w.trace, self.params, self.mem, self.mapper,
+                    pass_config=self.pass_config)
                 self.backend.execute(sched, Batch(name, [], [[]], 0.0),
                                      key_cache=self.key_cache,
                                      metrics=scratch, workload=name)
@@ -304,7 +318,7 @@ class PipelinedExecutor:
     def _execute_batch(self, batch: Batch, now: float) -> float:
         sched = self.compile_cache.get_schedule(
             self.workloads[batch.workload].trace, self.params, self.mem,
-            self.mapper)
+            self.mapper, pass_config=self.pass_config)
         service_s = self.backend.execute(
             sched, batch, key_cache=self.key_cache, metrics=self.metrics,
             workload=batch.workload)

@@ -1,7 +1,7 @@
 """Gradient compression for the slow (`pod`/DCN) axis: int8 quantization
 with error feedback.
 
-Bandwidth hierarchy (DESIGN.md §7): ICI reductions (`data`, `model`) stay
+Bandwidth hierarchy (DESIGN.md §8): ICI reductions (`data`, `model`) stay
 full precision; only the cross-pod all-reduce is compressed (4x fewer DCN
 bytes in bf16->int8). Error feedback carries the quantization residual into
 the next step, preserving convergence (Karimireddy et al.).

@@ -1,7 +1,7 @@
 """Fault tolerance: supervised stepping with checkpoint/replay and
 straggler detection.
 
-Policy (1000+ node design, DESIGN.md §7):
+Policy (1000+ node design, DESIGN.md §8):
 * every `ckpt_every` steps an async checkpoint is cut;
 * a step raising a device/runtime error triggers restore-from-latest and
   replay (deterministic data keyed by step index makes replay exact);

@@ -1,0 +1,299 @@
+"""repro.compiler: pass unit semantics against the plaintext oracle,
+decrypt-equality through the real CKKS stack for every pass on every
+registered workload, OpCost monotonicity, and bootstrap insertion
+turning level exhaustion into placed bootstrap ops."""
+import numpy as np
+import pytest
+
+from repro.compiler import (CkksTraceInterpreter, PassConfig,
+                            analytic_seconds, optimize_trace,
+                            reference_eval)
+from repro.compiler.passes import (PASS_ORDER, BootstrapInsertion,
+                                   CommonSubexpr, ConstantFold,
+                                   DeadCodeElimination, LazyRescale,
+                                   RotationOpt)
+from repro.core.params import test_params as _test_params
+from repro.core.trace import (LevelBudgetExhausted, infer_levels,
+                              trace_program)
+from repro.runtime.compile_cache import trace_fingerprint
+from repro.runtime.workloads import (HELR_CONSTS, LOLA_CONSTS, lola_infer,
+                                     make_helr_iter, make_matvec,
+                                     make_poly_eval, matvec_consts,
+                                     poly_consts)
+
+PARAMS = _test_params(log_n=8, n_levels=6, dnum=2, log_scale=26)
+SLOTS = PARAMS.slots
+CFG = PassConfig(bsgs_min_terms=4)
+
+# name -> (program, n_inputs, const names, start_level)
+WORKLOADS = {
+    "helr": (make_helr_iter(), 2, HELR_CONSTS, 5),
+    "lola": (lola_infer, 1, LOLA_CONSTS, 4),
+    "matvec8": (make_matvec(8), 1, matvec_consts(8), 4),
+    "poly7": (make_poly_eval(7), 1, poly_consts(7), 6),  # exhausts: 7 > 6
+}
+
+
+def _trace(name, infer=True):
+    fn, n_in, consts, start = WORKLOADS[name]
+    t = trace_program(fn, n_in, const_names=consts)
+    if infer:
+        infer_levels(t, start)
+    return t, start
+
+
+def _io(name, rng):
+    """Inputs/consts sized to stay inside the 30-bit q0 headroom."""
+    fn, n_in, consts, _ = WORKLOADS[name]
+    def vec(s):
+        return s * (rng.normal(size=SLOTS) + 1j * rng.normal(size=SLOTS))
+    ins = [vec(0.4), vec(0.3)][:n_in]
+    cs = {c: 0.25 * rng.normal(size=SLOTS) for c in consts}
+    return ins, cs
+
+
+def _count(trace, kind):
+    return sum(1 for o in trace.ops if o.kind == kind)
+
+
+# ---------------------------------------------------------------------------
+# pass unit tests (plaintext oracle)
+# ---------------------------------------------------------------------------
+
+def _plain_equal(t_a, t_b, name, rng):
+    ins, cs = _io(name, rng)
+    a = reference_eval(t_a, ins, cs)
+    b = reference_eval(t_b, ins, cs)
+    for va, vb in zip(a, b):
+        np.testing.assert_allclose(va, vb, atol=1e-10)
+
+
+def test_dce_removes_unused_keeps_inputs(rng):
+    def prog(x, y):
+        dead = x * y
+        dead2 = dead.rotate(3)       # noqa: F841  (dead chain)
+        return x + y
+    t = trace_program(prog, 2)
+    infer_levels(t, 4)
+    out = DeadCodeElimination().run(t, PARAMS, CFG)
+    assert len(out.ops) == len(t.ops) - 2
+    assert len(out.inputs) == 2          # unused inputs always survive
+    r = reference_eval(out, [np.ones(SLOTS), 2 * np.ones(SLOTS)])
+    np.testing.assert_allclose(r[0], 3.0)
+
+
+def test_cse_merges_duplicate_rotations_and_commutative_adds(rng):
+    def prog(x, y):
+        a = x.rotate(2) + y
+        b = y + x.rotate(2)          # commutes + duplicate rotation
+        return a * b
+    t = trace_program(prog, 2)
+    infer_levels(t, 4)
+    out = CommonSubexpr().run(t, PARAMS, CFG)
+    assert _count(out, "rotate") == 1
+    assert _count(out, "hadd") == 1
+    ins = [0.3 * rng.normal(size=SLOTS), 0.3 * rng.normal(size=SLOTS)]
+    np.testing.assert_allclose(reference_eval(t, ins)[0],
+                               reference_eval(out, ins)[0], atol=1e-12)
+
+
+def test_fold_collapses_plaintext_chains(rng):
+    def prog(x, consts=None):
+        return (x * consts["a"] * consts["b"]) + consts["c"] + consts["d"]
+    t = trace_program(prog, 1, const_names=("a", "b", "c", "d"))
+    infer_levels(t, 4)
+    out = ConstantFold().run(t, PARAMS, CFG)
+    assert _count(out, "pmul") == 1 and _count(out, "padd") == 1
+    ins = [0.4 * rng.normal(size=SLOTS)]
+    cs = {c: 0.3 * rng.normal(size=SLOTS) for c in "abcd"}
+    np.testing.assert_allclose(reference_eval(t, ins, cs)[0],
+                               reference_eval(out, ins, cs)[0], atol=1e-12)
+
+
+def test_fold_keeps_shared_inner_pmul():
+    def prog(x, consts=None):
+        h = x * consts["a"]
+        return (h * consts["b"]) + h      # inner has a second consumer
+    t = trace_program(prog, 1, const_names=("a", "b"))
+    infer_levels(t, 4)
+    out = ConstantFold().run(t, PARAMS, CFG)
+    assert _count(out, "pmul") == 2
+
+
+def test_rotation_compose_and_identity(rng):
+    def prog(x):
+        a = x.rotate(2).rotate(3)          # -> rotate(5)
+        b = x.rotate(7).rotate(-7)         # -> identity
+        return a + b
+    t = trace_program(prog, 1)
+    infer_levels(t, 4)
+    out = RotationOpt().run(t, PARAMS, CFG)
+    steps = sorted(o.meta["step"] for o in out.ops if o.kind == "rotate")
+    assert steps == [5]
+    ins = [rng.normal(size=SLOTS)]
+    np.testing.assert_allclose(reference_eval(t, ins)[0],
+                               reference_eval(out, ins)[0], atol=1e-12)
+
+
+def test_bsgs_factors_matvec_rotations(rng):
+    t, _ = _trace("matvec8")
+    out = RotationOpt().run(t, PARAMS, CFG)
+    # 7 rotations -> babies + giants (~2*sqrt(8))
+    assert _count(out, "rotate") < _count(t, "rotate")
+    assert _count(out, "rotate") <= 5
+    _plain_equal(t, out, "matvec8", rng)
+
+
+def test_bsgs_leaves_log_tree_helr_alone():
+    t, _ = _trace("helr")
+    out = RotationOpt().run(t, PARAMS, CFG)
+    assert _count(out, "rotate") == _count(t, "rotate")
+
+
+def test_lazy_rescale_defers_to_one_rescale_per_sum(rng):
+    t, _ = _trace("matvec8")
+    out = LazyRescale().run(t, PARAMS,
+                            PassConfig(bsgs_min_terms=4, start_level=4))
+    lazies = sum(1 for o in out.ops if o.meta.get("lazy"))
+    assert lazies == 8                      # every diagonal product
+    assert _count(out, "rescale") == 1      # one sum, one rescale
+    infer_levels(out, 4)
+    assert analytic_seconds(out, PARAMS) < analytic_seconds(t, PARAMS)
+    _plain_equal(t, out, "matvec8", rng)
+
+
+def test_bootstrap_insertion_fixes_exhaustion(rng):
+    t, start = _trace("poly7", infer=False)
+    with pytest.raises(LevelBudgetExhausted):
+        infer_levels(t, start)
+    out = BootstrapInsertion().run(t, PARAMS,
+                                   PassConfig(start_level=start))
+    assert _count(out, "bootstrap") >= 1
+    infer_levels(out, start)                # must not raise now
+    assert all(o.level is not None and o.level >= 0 for o in out.ops)
+    _plain_equal(t, out, "poly7", rng)
+
+
+def test_bootstrap_disabled_surfaces_structured_error():
+    t, start = _trace("poly7", infer=False)
+    with pytest.raises(LevelBudgetExhausted) as ei:
+        optimize_trace(t, PARAMS,
+                       PassConfig(bootstrap=False, start_level=start))
+    assert ei.value.op_index >= 0
+
+
+def test_bootstrap_cut_point_is_late():
+    """The refresh lands where the budget dies, not at the inputs —
+    late cuts consume the full budget per refresh (fewest bootstraps)."""
+    t, start = _trace("poly7", infer=False)
+    out = BootstrapInsertion().run(t, PARAMS, PassConfig(start_level=start))
+    assert _count(out, "bootstrap") == 1    # depth 8 over budget 6: one cut
+    (b,) = [o for o in out.ops if o.kind == "bootstrap"]
+    assert out.ops[b.args[0]].kind not in ("input", "const")
+
+
+# ---------------------------------------------------------------------------
+# manager: cost accounting + determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wname", list(WORKLOADS))
+def test_cost_never_increases_per_pass(wname):
+    t, start = _trace(wname, infer=False)
+    cfg = PassConfig(bsgs_min_terms=4, start_level=start)
+    opt, report = optimize_trace(t, PARAMS, cfg)
+    for s in report.passes:
+        if s.name == "bootstrap" or not s.applied:
+            continue
+        if s.seconds_before is not None and s.seconds_after is not None:
+            assert s.seconds_after <= s.seconds_before * (1 + 1e-9), \
+                f"{s.name} increased cost on {wname}"
+    assert report.seconds_opt is not None
+    assert report.format_table()            # renders without blowing up
+
+
+def test_full_pipeline_speedup_on_matvec():
+    """Acceptance: the full pipeline strictly reduces analytic latency
+    on the rotation-heavy workload, >= 1.3x."""
+    t = trace_program(make_matvec(16), 1, const_names=matvec_consts(16))
+    infer_levels(t, 5)
+    opt, report = optimize_trace(t, PARAMS, PassConfig(start_level=5))
+    assert report.speedup is not None and report.speedup >= 1.3
+
+
+def test_optimize_trace_is_deterministic_and_pure():
+    t, start = _trace("matvec8")
+    fp_before = trace_fingerprint(t)
+    a, _ = optimize_trace(t, PARAMS, CFG)
+    b, _ = optimize_trace(t, PARAMS, CFG)
+    assert trace_fingerprint(a) == trace_fingerprint(b)
+    assert trace_fingerprint(t) == fp_before    # input untouched
+
+
+# ---------------------------------------------------------------------------
+# decrypt-equality through the real CKKS stack: every pass, every workload
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ckks_interp():
+    return CkksTraceInterpreter(PARAMS, seed=7)
+
+
+@pytest.fixture(scope="module")
+def ckks_baselines(ckks_interp):
+    """Decoded outputs of each workload's runnable baseline: the raw
+    trace, or (for level-exhausting programs) the bootstrap-only
+    rewrite. Shared across the per-pass matrix so each workload pays one
+    baseline execution."""
+    rng = np.random.default_rng(1234)
+    out = {}
+    for name in WORKLOADS:
+        t, start = _trace(name, infer=False)
+        base, _ = optimize_trace(
+            t, PARAMS,
+            PassConfig(start_level=start).with_passes(("bootstrap",)))
+        ins, cs = _io(name, np.random.default_rng(1234))
+        dec = ckks_interp.run(base, ins, cs)
+        ref = reference_eval(t, ins, cs)
+        for d, r in zip(dec, ref):
+            np.testing.assert_allclose(d, r, atol=2e-3)
+        out[name] = (base, dec)
+    return out
+
+
+@pytest.mark.parametrize("wname", list(WORKLOADS))
+@pytest.mark.parametrize("pname", [p.name for p in PASS_ORDER
+                                   if p.name != "bootstrap"])
+def test_per_pass_decrypt_equality(ckks_interp, ckks_baselines,
+                                   wname, pname):
+    """Each pass alone (on top of the bootstrap feasibility floor) must
+    decode to the baseline's values through real encrypt/eval/decrypt.
+    A pass that leaves the trace byte-identical is vacuously equal and
+    skips the (expensive) duplicate execution."""
+    t, start = _trace(wname, infer=False)
+    cfg = PassConfig(bsgs_min_terms=4, start_level=start).with_passes(
+        ("bootstrap", pname))
+    opt, _ = optimize_trace(t, PARAMS, cfg)
+    base, base_dec = ckks_baselines[wname]
+    if trace_fingerprint(opt) == trace_fingerprint(base):
+        return
+    ins, cs = _io(wname, np.random.default_rng(1234))
+    dec = ckks_interp.run(opt, ins, cs)
+    for d, b in zip(dec, base_dec):
+        np.testing.assert_allclose(d, b, atol=2e-3)
+
+
+@pytest.mark.parametrize("wname", list(WORKLOADS))
+def test_full_pipeline_decrypt_equality(ckks_interp, ckks_baselines,
+                                        wname):
+    t, start = _trace(wname, infer=False)
+    cfg = PassConfig(bsgs_min_terms=4, start_level=start)
+    opt, _ = optimize_trace(t, PARAMS, cfg)
+    base, base_dec = ckks_baselines[wname]
+    if trace_fingerprint(opt) == trace_fingerprint(base):
+        return
+    ins, cs = _io(wname, np.random.default_rng(1234))
+    dec = ckks_interp.run(opt, ins, cs)
+    ref = reference_eval(t, ins, cs)
+    for d, b, r in zip(dec, base_dec, ref):
+        np.testing.assert_allclose(d, b, atol=2e-3)   # vs baseline CKKS
+        np.testing.assert_allclose(d, r, atol=2e-3)   # vs plaintext oracle

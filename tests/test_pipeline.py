@@ -42,9 +42,18 @@ def test_level_inference_monotone(helr_trace):
 
 
 def test_level_budget_exhaustion_detected():
+    """Regression: exhaustion must raise the structured
+    LevelBudgetExhausted (not a bare assert) carrying the failing op, so
+    the compiler's bootstrap-insertion pass can catch and rewrite."""
     t = tr.trace_program(_helr_like, 2, const_names=("c1", "c3"))
-    with pytest.raises(AssertionError):
+    with pytest.raises(tr.LevelBudgetExhausted) as ei:
         tr.infer_levels(t, start_level=2)   # too shallow for depth-4 program
+    exc = ei.value
+    assert exc.kind in ("hmul", "pmul")
+    assert exc.level < 0
+    assert t.ops[exc.op_index].kind == exc.kind
+    # failing op's index/kind land in the message for log readability
+    assert str(exc.op_index) in str(exc) and exc.kind in str(exc)
 
 
 def test_op_cost_model_sane():

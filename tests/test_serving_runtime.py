@@ -240,6 +240,49 @@ def test_compile_cache_hits_same_program():
     assert cc.metrics.count("compile_misses") == 1
 
 
+def test_trace_fingerprint_discriminates_step_const_and_level():
+    """Traces differing only in rotation step, const name, or inferred
+    levels must not collide (they compile to different schedules)."""
+    from repro.core.trace import infer_levels, trace_program
+
+    def prog(step, cname):
+        def fn(x, consts=None):
+            return x.rotate(step) * consts[cname]
+        return fn
+
+    def capture(step=3, cname="c1", start=7):
+        t = trace_program(prog(step, cname), 1, const_names=(cname,))
+        infer_levels(t, start)
+        return trace_fingerprint(t)
+
+    base = capture()
+    assert capture() == base                       # deterministic
+    assert capture(step=4) != base                 # rotation step
+    assert capture(cname="c2") != base             # const name
+    assert capture(start=6) != base                # inferred levels
+
+
+def test_compile_cache_distinct_entries_per_pass_config():
+    """Opt and no-opt (and different pass selections) of one workload
+    must occupy distinct cache entries."""
+    from repro.compiler import PassConfig
+    from repro.core.trace import infer_levels, trace_program
+    params = _test_params(log_n=10, n_levels=8, dnum=2)
+    mem = MemoryModel(n_partitions=4)
+    cc = CompileCache()
+    t = trace_program(_prog, 2, const_names=("c1",))
+    infer_levels(t, 7)
+    cc.get_schedule(t, params, mem)
+    cc.get_schedule(t, params, mem, pass_config=PassConfig())
+    cc.get_schedule(t, params, mem,
+                    pass_config=PassConfig(rotation=False))
+    assert len(cc) == 3
+    assert cc.metrics.count("compile_misses") == 3
+    # and each re-request is a pure hit
+    cc.get_schedule(t, params, mem, pass_config=PassConfig())
+    assert cc.metrics.count("compile_hits") == 1
+
+
 # ---------------------------------------------------------------------------
 # metrics
 # ---------------------------------------------------------------------------
@@ -332,6 +375,53 @@ def test_serve_rejects_oversized_instead_of_hanging():
     m = ex.serve([r])                       # must return, not hang
     assert r.status is RequestStatus.REJECTED
     assert m.count("requests_oversized") == 1
+
+
+def test_executor_serves_optimized_workloads_end_to_end():
+    """With a PassConfig the executor compiles through repro.compiler:
+    the rotation-heavy matvec serves on an optimized schedule and a
+    level-exhausting poly workload registers and serves via automatic
+    bootstrap insertion instead of dying in infer_levels."""
+    from repro.compiler import PassConfig
+    from repro.core.trace import LevelBudgetExhausted
+    from repro.runtime.workloads import (make_matvec, make_poly_eval,
+                                         matvec_consts, poly_consts)
+    params = _test_params(log_n=10, n_levels=8, dnum=2)
+    mem = MemoryModel(n_partitions=4, partition_bytes=8 * 2 ** 20)
+
+    def build(opt):
+        ex = PipelinedExecutor(
+            params, mem,
+            policy=BatchPolicy(slots_per_ct=params.slots, max_batch=4,
+                               max_wait_s=1e-3),
+            pass_config=PassConfig() if opt else None)
+        ex.register("matvec", make_matvec(16), 1,
+                    const_names=matvec_consts(16), start_level=7)
+        return ex
+
+    # no-opt: the deep poly workload is rejected at registration
+    with pytest.raises(LevelBudgetExhausted):
+        build(opt=False).register("poly", make_poly_eval(12), 1,
+                                  const_names=poly_consts(12),
+                                  start_level=7)
+
+    ex = build(opt=True)
+    ex.register("poly", make_poly_eval(12), 1,
+                const_names=poly_consts(12), start_level=7)
+    arrivals = [Request(ex.queue.next_request_id(), "t0",
+                        ("matvec", "poly")[i % 2], arrival_s=0.0,
+                        slots_needed=8) for i in range(8)]
+    m = ex.serve(arrivals)
+    assert m.count("requests_completed") == 8
+    assert m.count("traces_optimized") == 2
+
+    # acceptance: the compiled matvec schedule beats the verbatim one
+    noopt = build(opt=False)
+    tr = noopt.workloads["matvec"].trace
+    s_off = noopt.compile_cache.get_schedule(tr, params, mem)
+    s_on = ex.compile_cache.get_schedule(tr, params, mem,
+                                         pass_config=ex.pass_config)
+    assert s_off.total_latency(8) / s_on.total_latency(8) >= 1.3
 
 
 def test_mesh_pad_smaller_than_batch_keeps_all_groups():
