@@ -1,0 +1,171 @@
+"""Fig. 18 (new figure — cost-model calibration): per-stage predicted vs
+measured execution time for the serving workload sweep.
+
+The analytic MemoryModel (core/pipeline.py) has priced every schedule
+the serving runtime ever executed, but until the `CiphertextBackend`
+nothing real ever ran — this benchmark is the calibration table the
+cost model never had. For each registered workload family the same
+compiled `PipelineSchedule` is (a) priced stage-by-stage by the
+analytic model (`stage_times`: load + max(compute, transfer), the
+AnalyticBackend formula) and (b) executed stage-by-stage on actually
+encrypted batches through the batched CKKS engine
+(repro/compiler/engine.py), with a completion barrier per stage. The
+first encrypted run warms tracing/compilation; the second run's times
+are reported.
+
+Absolute agreement is not expected — the MemoryModel prices a paper-
+scale PIM device, the measurement is whatever host this runs on — so
+the table reports, per workload, a single fitted scale factor
+(sum measured / sum predicted) and the per-stage ratio spread around
+it, plus pairwise rank concordance (do the backends agree which stages
+are the expensive ones?). That relative signal is what the fig16/fig17
+analytic sweeps actually rely on.
+
+    PYTHONPATH=src python -m benchmarks.fig18_calibration [--smoke]
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/run.py
+contract) and rewrites
+``benchmarks/results/fig18_calibration.jsonl`` for report.py.
+"""
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.compiler import PassConfig
+from repro.core.params import test_params
+from repro.core.pipeline import MemoryModel
+from repro.runtime.ciphertext_backend import CiphertextBackend
+from repro.runtime.compile_cache import CompileCache
+from repro.runtime.workloads import (HELR_CONSTS, LOLA_CONSTS, lola_infer,
+                                     make_helr_iter, make_matvec,
+                                     make_poly_eval, matvec_consts,
+                                     poly_consts)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _workloads(smoke: bool):
+    dim = 8 if smoke else 16
+    deg = 8 if smoke else 12
+    return {
+        "helr": (make_helr_iter(), 2, HELR_CONSTS),
+        "lola": (lola_infer, 1, LOLA_CONSTS),
+        f"matvec{dim}": (make_matvec(dim), 1, matvec_consts(dim)),
+        f"poly{deg}": (make_poly_eval(deg), 1, poly_consts(deg)),
+    }
+
+
+def _setting(smoke: bool):
+    # partitions sized to a few keyswitch footprints so every workload
+    # splits into several stages — a one-row calibration table says
+    # nothing about per-stage agreement
+    if smoke:
+        params = test_params(log_n=8, n_levels=8, dnum=2, log_scale=26)
+        mem = MemoryModel(n_partitions=4, partition_bytes=256 * 2 ** 10)
+        return params, mem, 7, 4
+    params = test_params(log_n=10, n_levels=8, dnum=2, log_scale=26)
+    mem = MemoryModel(n_partitions=4, partition_bytes=1 * 2 ** 20)
+    return params, mem, 7, 8
+
+
+def rank_concordance(a, b) -> float:
+    """Fraction of strictly-ordered pairs of `a` that `b` orders the
+    same way (1.0 = identical stage ranking; 0.5 ~ uncorrelated)."""
+    pairs = concordant = 0
+    for i in range(len(a)):
+        for j in range(i + 1, len(a)):
+            if a[i] == a[j]:
+                continue
+            pairs += 1
+            if (a[i] < a[j]) == (b[i] < b[j]):
+                concordant += 1
+    return concordant / pairs if pairs else 1.0
+
+
+def main(argv=()) -> None:
+    # argv defaults to () so benchmarks/run.py can call main() without
+    # this parser swallowing run.py's own flags
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small ring + workloads, fast CI check")
+    args = ap.parse_args(list(argv))
+
+    params, mem, start, batch = _setting(args.smoke)
+    backend = CiphertextBackend(params, use_kernels=False)
+    engine = backend.engine
+    slots = params.slots
+    cc = CompileCache()
+    cfg = PassConfig(start_level=start, bsgs_min_terms=4)
+    rng = np.random.default_rng(0)
+
+    os.makedirs(RESULTS, exist_ok=True)
+    records = []
+    for wname, (fn, n_in, consts) in _workloads(args.smoke).items():
+        from repro.core.trace import trace_program
+        trace = trace_program(fn, n_in, const_names=consts)
+        sched = cc.get_schedule(trace, params, mem, pass_config=cfg)
+        predicted = [load + max(comp, xfer)
+                     for load, comp, xfer in sched.stage_times(batch)]
+
+        cvals = backend.workload_consts(wname, sched.trace)
+        inputs = [rng.uniform(-0.8, 0.8, size=(batch, slots))
+                  for _ in sched.trace.inputs]
+        # run 1 traces the appliers eagerly (warming the context's NTT /
+        # BConv tables), run 2 pays their XLA compilation; run 3 is the
+        # steady serving state this table calibrates
+        for _ in range(2):
+            outs, _warm = engine.run_schedule(sched, inputs, cvals,
+                                              const_scope=(wname,))
+        outs, measured = engine.run_schedule(sched, inputs, cvals,
+                                             const_scope=(wname,))
+        from repro.compiler.interp import reference_eval
+        ref = reference_eval(sched.trace, inputs, cvals)
+        err = max(float(np.abs(np.asarray(d) - np.asarray(r)).max())
+                  for d, r in zip(outs, ref))
+
+        # bootstrap stages are excluded from the fit: the engine refreshes
+        # exactly (decrypt/re-encrypt) while the model bills the full
+        # EvalMod chain — by design not the same operation
+        boot = [any(o.kind == "bootstrap" for o in st.ops)
+                for st in sched.stages]
+        fit_pred = sum(p for p, b in zip(predicted, boot) if not b)
+        fit_meas = sum(m for m, b in zip(measured, boot) if not b)
+        scale = fit_meas / fit_pred if fit_pred else 0.0
+        conc = rank_concordance(
+            [p for p, b in zip(predicted, boot) if not b],
+            [m for m, b in zip(measured, boot) if not b])
+        for st, pred_s, meas_s, is_boot in zip(sched.stages, predicted,
+                                               measured, boot):
+            ratio = meas_s / (pred_s * scale) if pred_s and scale else 0.0
+            row(f"fig18_{wname}_stage{st.idx}", meas_s * 1e6,
+                f"pred={pred_s * 1e6:.1f}us x{ratio:.2f}"
+                f"{' [bootstrap]' if is_boot else ''} {st.describe()}")
+            records.append({
+                "workload": wname, "stage": st.idx,
+                "n_ops": len(st.ops), "bootstrap": is_boot,
+                "predicted_s": pred_s, "measured_s": meas_s,
+                "ratio_vs_fit": ratio, "smoke": bool(args.smoke),
+            })
+        row(f"fig18_{wname}_total", sum(measured) * 1e6,
+            f"pred={sum(predicted) * 1e6:.1f}us scale={scale:.1f} "
+            f"concordance={conc:.2f} maxerr={err:.2e}")
+        records.append({
+            "workload": wname, "stage": "total",
+            "n_ops": sum(len(st.ops) for st in sched.stages),
+            "predicted_s": sum(predicted), "measured_s": sum(measured),
+            "fitted_scale": scale, "rank_concordance": conc,
+            "max_decrypt_error": err, "tolerance": engine.tolerance,
+            "smoke": bool(args.smoke),
+        })
+
+    with open(os.path.join(RESULTS, "fig18_calibration.jsonl"), "w") as f:
+        for r in records:
+            f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

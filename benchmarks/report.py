@@ -89,6 +89,34 @@ def fig17_table():
               f"{best['speedup_vs_unopt']:.2f}x.")
 
 
+def fig18_table():
+    path = os.path.join(RESULTS, "fig18_calibration.jsonl")
+    if not os.path.exists(path):
+        return
+    recs = [json.loads(line) for line in open(path)]
+    print("\n### Fig. 18 — cost-model calibration (analytic predicted vs "
+          "measured encrypted execution)\n")
+    print("| workload | stage | ops | predicted_ms | measured_ms | "
+          "meas/(pred*fit) |")
+    print("|---|---|---|---|---|---|")
+    for r in recs:
+        if r["stage"] == "total":
+            continue
+        mark = " (bootstrap)" if r.get("bootstrap") else ""
+        print(f"| {r['workload']} | {r['stage']}{mark} | {r['n_ops']} | "
+              f"{r['predicted_s'] * 1e3:.3f} | {r['measured_s'] * 1e3:.3f} | "
+              f"{r['ratio_vs_fit']:.2f} |")
+    totals = [r for r in recs if r["stage"] == "total"]
+    if totals:
+        print("\n| workload | fitted scale | rank concordance | "
+              "max decrypt err | tolerance |")
+        print("|---|---|---|---|---|")
+        for r in totals:
+            print(f"| {r['workload']} | {r['fitted_scale']:.1f} | "
+                  f"{r['rank_concordance']:.2f} | "
+                  f"{r['max_decrypt_error']:.2e} | {r['tolerance']:.2e} |")
+
+
 def pick_hillclimb():
     recs = [r for r in load("roofline.jsonl") if r["status"] == "ok"]
     by_rf = sorted((r for r in recs if r["shape"] != "long_500k"),
@@ -113,5 +141,7 @@ if __name__ == "__main__":
         roofline_table()
     if what in ("all", "fig17"):
         fig17_table()
+    if what in ("all", "fig18"):
+        fig18_table()
     if what in ("all", "pick"):
         pick_hillclimb()

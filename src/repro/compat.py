@@ -44,3 +44,13 @@ def set_mesh(mesh):
     if hasattr(jax, "set_mesh"):
         return jax.set_mesh(mesh)
     return mesh
+
+
+def abstract_mesh(sizes, names):
+    """Device-less mesh for spec resolution (tests, dry-runs): current
+    jax takes ``AbstractMesh(shape_tuple, axis_names)``; 0.4.x wants one
+    tuple of (name, size) pairs."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(sizes), tuple(names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))

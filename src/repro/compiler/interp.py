@@ -2,33 +2,25 @@
 
 Two interpreters over the same `FheTrace` IR:
 
-* `reference_eval` — numpy on plaintext slot vectors. Fast oracle for
-  pass unit tests and for sanity-checking the CKKS runs below.
+* `reference_eval` — numpy on plaintext slot vectors (batched: inputs
+  may be ``(slots,)`` or ``(B, slots)``). Fast oracle for pass unit
+  tests, for sanity-checking the CKKS runs below, and for the serving
+  runtime's decrypt-accuracy metric.
 * `CkksTraceInterpreter` — executes a trace op-by-op through the REAL
-  CKKS stack (core.encoder/encryptor/ops): encode + encrypt the inputs,
-  run every homomorphic op with genuine relinearization/Galois keys,
-  decrypt + decode the outputs. Pass verification asserts that an
-  optimized trace and its original decode to the same values through
-  this interpreter (tests/test_compiler.py), which is what "semantics
+  CKKS stack. Since PR 3 this is a thin single-sample wrapper over the
+  batched schedule-evaluation engine (`repro.compiler.engine
+  .CkksEngine`), which is shared with the serving runtime's
+  `CiphertextBackend`: encode + encrypt the inputs, run every
+  homomorphic op with genuine relinearization/Galois keys, decrypt +
+  decode the outputs. Pass verification asserts that an optimized
+  trace and its original decode to the same values through this
+  interpreter (tests/test_compiler.py), which is what "semantics
   preserved" means for a scheme whose ciphertexts are noisy by design.
 
-Scale handling mirrors the repo's existing idiom (core/linalg.py): two
-operands of an hadd/hsub at the same level have structurally identical
-scales (equal level means the same rescale prime path in this IR, for
-eager and post-lazy-rescale values alike), so only a float-roundoff
-scale-tag coercion is needed; across a level gap the deeper-budget
-operand is brought to the shallower one *exactly* with
-`linalg.adjust_to` (a unit pmul at a compensating plaintext scale,
-spending one of the levels being dropped anyway). A same-level add with
-materially different scales is an invalid trace and raises. Derived
-const expressions minted by the passes (`meta["cexpr"]`) are resolved
-against the base bindings here.
-
-`bootstrap` ops execute as an exact refresh (decrypt -> re-encode at the
-target level -> re-encrypt): the semantic contract of bootstrapping
-(value-preserving level restoration) without the minutes-long EvalMod
-chain; the full approximate pipeline lives in core/bootstrap.py and is
-what the cost model bills for.
+Scale-handling and bootstrap-refresh semantics live in the engine now;
+see repro/compiler/engine.py's module docstring for the invariants
+(structurally identical scales at equal level, exact `linalg.adjust_to`
+across level gaps, bootstrap as exact decrypt/re-encrypt refresh).
 """
 from __future__ import annotations
 
@@ -36,43 +28,24 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import ops as hops
-from repro.core.ciphertext import Ciphertext, Plaintext
-from repro.core.context import CkksContext
-from repro.core.encoder import CkksEncoder
-from repro.core.encryptor import CkksEncryptor
+from repro.compiler.engine import (CkksEngine, const_vec,  # noqa: F401
+                                   resolve_cexpr)
 from repro.core.params import CkksParams
 from repro.core.trace import FheTrace
 
-
-def resolve_cexpr(expr, consts: Dict[str, np.ndarray]) -> np.ndarray:
-    """Evaluate a derived-const expression (see ir.py) to a slot vector."""
-    tag = expr[0]
-    if tag == "ref":
-        return np.asarray(consts[expr[1]])
-    if tag == "mul":
-        return resolve_cexpr(expr[1], consts) * resolve_cexpr(expr[2], consts)
-    if tag == "add":
-        return resolve_cexpr(expr[1], consts) + resolve_cexpr(expr[2], consts)
-    if tag == "rot":
-        # rotate(step): out[i] = in[i + step]
-        return np.roll(resolve_cexpr(expr[1], consts), -expr[2])
-    raise ValueError(f"unknown const expression {expr!r}")
-
-
-def _const_vec(op, consts, slots: int) -> np.ndarray:
-    expr = op.meta.get("cexpr", ("ref", op.meta["const"]))
-    v = resolve_cexpr(expr, consts)
-    assert len(v) == slots, f"const for op {op.idx} has {len(v)} slots"
-    return v
+_const_vec = const_vec          # back-compat alias (old private name)
 
 
 def reference_eval(trace: FheTrace, inputs: Sequence[np.ndarray],
                    consts: Optional[Dict[str, np.ndarray]] = None
                    ) -> List[np.ndarray]:
-    """Plaintext oracle: exact slotwise arithmetic, no noise, no scales."""
+    """Plaintext oracle: exact slotwise arithmetic, no noise, no scales.
+
+    Inputs may carry leading batch dimensions; slot ops act on the last
+    axis.
+    """
     consts = consts or {}
-    slots = len(inputs[0])
+    slots = np.asarray(inputs[0]).shape[-1]
     env: Dict[int, np.ndarray] = {}
     for i, idx in enumerate(trace.inputs):
         env[idx] = np.asarray(inputs[i])
@@ -87,11 +60,11 @@ def reference_eval(trace: FheTrace, inputs: Sequence[np.ndarray],
         elif op.kind == "hmul":
             env[op.idx] = a[0] * a[1]
         elif op.kind == "pmul":
-            env[op.idx] = a[0] * _const_vec(op, consts, slots)
+            env[op.idx] = a[0] * const_vec(op, consts, slots)
         elif op.kind == "padd":
-            env[op.idx] = a[0] + _const_vec(op, consts, slots)
+            env[op.idx] = a[0] + const_vec(op, consts, slots)
         elif op.kind == "rotate":
-            env[op.idx] = np.roll(a[0], -op.meta["step"])
+            env[op.idx] = np.roll(a[0], -op.meta["step"], axis=-1)
         elif op.kind == "conjugate":
             env[op.idx] = np.conj(a[0])
         elif op.kind in ("rescale", "bootstrap"):
@@ -101,121 +74,13 @@ def reference_eval(trace: FheTrace, inputs: Sequence[np.ndarray],
     return [env[o] for o in trace.outputs]
 
 
-class CkksTraceInterpreter:
-    """Executes traces through the real encrypt/eval/decrypt stack.
+class CkksTraceInterpreter(CkksEngine):
+    """Single-sample compatibility facade over `CkksEngine`.
 
-    Keys (secret, relin, per-element Galois) are generated once and
-    cached across `run` calls, so verifying a workload under several
-    pass configurations pays keygen once.
+    Everything — key generation/caching, batched op appliers, const
+    memoization — is inherited; `run` keeps the original 1-D
+    vectors-in / 1-D decodes-out contract (CkksEngine.run).
     """
 
     def __init__(self, params: CkksParams, seed: int = 7):
-        self.params = params
-        self.ctx = CkksContext(params)
-        self.encoder = CkksEncoder(self.ctx)
-        self.encryptor = CkksEncryptor(self.ctx, seed=seed)
-        self.sk = self.encryptor.keygen()
-        self.rk = self.encryptor.relin_keygen(self.sk)
-        self._gks = {}
-
-    def _gk(self, elt: int):
-        if elt not in self._gks:
-            self._gks.update(self.encryptor.galois_keygen(self.sk, [elt]))
-        return self._gks[elt]
-
-    # -- helpers -------------------------------------------------------------
-
-    def _encrypt(self, v: np.ndarray, level: int) -> Ciphertext:
-        scale = 2.0 ** self.params.log_scale
-        pt = Plaintext(self.encoder.encode(v, scale, level), level, scale)
-        return self.encryptor.encrypt_sk(pt, self.sk)
-
-    def _decode(self, ct: Ciphertext) -> np.ndarray:
-        pt = self.encryptor.decrypt(ct, self.sk)
-        return self.encoder.decode(pt.data, ct.scale, ct.level)
-
-    def _aligned(self, c0: Ciphertext, c1: Ciphertext):
-        """Bring an hadd/hsub pair to one (level, scale); see module
-        docstring for when alignment is exact vs structural."""
-        from repro.core import linalg
-        lvl = min(c0.level, c1.level)
-
-        def down(hi: Ciphertext, partner_scale: float) -> Ciphertext:
-            if (hi.level > lvl
-                    and abs(hi.scale / partner_scale - 1.0) > 1e-6):
-                return linalg.adjust_to(self.ctx, self.encoder, hi, lvl,
-                                        partner_scale)
-            return hops.mod_switch_to_level(hi, lvl)
-
-        if c0.level > c1.level:
-            c0 = down(c0, c1.scale)
-        elif c1.level > c0.level:
-            c1 = down(c1, c0.scale)
-        rel = abs(c1.scale / c0.scale - 1.0)
-        if rel > 1e-6:
-            raise ValueError(
-                f"scale-incompatible add at level {lvl}: "
-                f"{c0.scale:.6e} vs {c1.scale:.6e} — the trace mixes "
-                f"rescale disciplines on one add")
-        if rel > 0:
-            c1 = Ciphertext(c1.data, c1.level, c0.scale)
-        return c0, c1
-
-    # -- execution -----------------------------------------------------------
-
-    def run(self, trace: FheTrace, inputs: Sequence[np.ndarray],
-            consts: Optional[Dict[str, np.ndarray]] = None,
-            start_level: Optional[int] = None) -> List[np.ndarray]:
-        """Encrypt `inputs`, execute every op, return decoded outputs."""
-        consts = consts or {}
-        ctx, params = self.ctx, self.params
-        slots = params.slots
-        scale = 2.0 ** params.log_scale
-        if start_level is None:
-            in_op = trace.ops[trace.inputs[0]] if trace.inputs else None
-            start_level = (in_op.level if in_op is not None
-                           and in_op.level is not None else params.n_levels)
-        env: Dict[int, Ciphertext] = {}
-        for i, idx in enumerate(trace.inputs):
-            env[idx] = self._encrypt(np.asarray(inputs[i]), start_level)
-        for op in trace.ops:
-            if op.kind in ("input", "const"):
-                continue
-            a = [env[x] for x in op.args]
-            lazy = bool(op.meta.get("lazy"))
-            if op.kind in ("hadd", "hsub"):
-                lhs, rhs = self._aligned(a[0], a[1])
-                fn = hops.hadd if op.kind == "hadd" else hops.hsub
-                env[op.idx] = fn(ctx, lhs, rhs)
-            elif op.kind == "hmul":
-                env[op.idx] = hops.hmul(ctx, a[0], a[1], self.rk,
-                                        do_rescale=not lazy)
-            elif op.kind == "pmul":
-                v = _const_vec(op, consts, slots)
-                pt = Plaintext(self.encoder.encode(v, scale, a[0].level),
-                               a[0].level, scale)
-                env[op.idx] = hops.pmul(ctx, a[0], pt, do_rescale=not lazy)
-            elif op.kind == "padd":
-                v = _const_vec(op, consts, slots)
-                pt = Plaintext(self.encoder.encode(v, a[0].scale,
-                                                   a[0].level),
-                               a[0].level, a[0].scale)
-                env[op.idx] = hops.padd(ctx, a[0], pt)
-            elif op.kind == "rotate":
-                step = op.meta["step"] % slots
-                if step == 0:
-                    env[op.idx] = a[0]
-                else:
-                    elt = ctx.rotation_element(step)
-                    env[op.idx] = hops.rotate(ctx, a[0], step, self._gk(elt))
-            elif op.kind == "conjugate":
-                env[op.idx] = hops.conjugate(ctx, a[0],
-                                             self._gk(ctx.conj_element))
-            elif op.kind == "rescale":
-                env[op.idx] = hops.rescale(ctx, a[0])
-            elif op.kind == "bootstrap":
-                target = op.level if op.level is not None else start_level
-                env[op.idx] = self._encrypt(self._decode(a[0]), target)
-            else:
-                raise ValueError(op.kind)
-        return [self._decode(env[o]) for o in trace.outputs]
+        super().__init__(params, seed=seed)

@@ -64,6 +64,10 @@ class PipelineSchedule:
     params: CkksParams
     mem: MemoryModel
     reload_per_op: bool = False   # naive mode: constants reloaded per op
+    trace: Optional[FheTrace] = None  # the mapped trace (op objects are
+    #                                   shared with the stages), so real
+    #                                   executors can encrypt inputs and
+    #                                   decode outputs (engine.run_schedule)
 
     # -- latency model -------------------------------------------------------
 
@@ -161,7 +165,8 @@ def generate_load_save_pipeline(trace: FheTrace, params: CkksParams,
         st.partition = i % mem.n_partitions
     rounds = [stages[i:i + mem.n_partitions]
               for i in range(0, len(stages), mem.n_partitions)]
-    return PipelineSchedule(stages, rounds, params, mem, reload_per_op=False)
+    return PipelineSchedule(stages, rounds, params, mem, reload_per_op=False,
+                            trace=trace)
 
 
 def generate_naive_pipeline(trace: FheTrace, params: CkksParams,
@@ -181,4 +186,4 @@ def generate_naive_pipeline(trace: FheTrace, params: CkksParams,
             overflow = True
         stages.append(st)
     return PipelineSchedule(stages, [stages], params, mem,
-                            reload_per_op=overflow)
+                            reload_per_op=overflow, trace=trace)

@@ -18,8 +18,11 @@ core/pipeline.py, fhe_dist/pipeline_exec.py) into an online runtime:
                     ``const_bytes`` accounting
 * ``compile_cache`` trace → PipelineSchedule memoization
 * ``executor``      round-based engine draining the batcher through the
-                    analytic MemoryModel backend or the real
-                    pipeline_exec mesh backend
+                    analytic MemoryModel backend, the real pipeline_exec
+                    mesh backend, or the real-CKKS ciphertext backend
+* ``ciphertext_backend``  batched encrypted execution of compiled
+                    schedules with per-workload decrypt-accuracy
+                    metrics (DESIGN.md §9)
 * ``metrics``       p50/p99 latency, throughput, cache hit rate,
                     partition occupancy
 
@@ -29,14 +32,17 @@ from repro.runtime.queue import AdmissionQueue, Request, RequestStatus
 from repro.runtime.batcher import Batch, BatchPolicy, SlotBatcher
 from repro.runtime.keycache import KeyCache
 from repro.runtime.compile_cache import CompileCache, trace_fingerprint
+from repro.runtime.ciphertext_backend import CiphertextBackend
 from repro.runtime.executor import (AnalyticBackend, MeshBackend,
-                                    PipelinedExecutor, Workload)
+                                    PipelinedExecutor, Workload,
+                                    resolve_backend)
 from repro.runtime.metrics import LatencyStats, MetricsRegistry
 
 __all__ = [
     "AdmissionQueue", "Request", "RequestStatus",
     "Batch", "BatchPolicy", "SlotBatcher",
     "KeyCache", "CompileCache", "trace_fingerprint",
-    "AnalyticBackend", "MeshBackend", "PipelinedExecutor", "Workload",
+    "AnalyticBackend", "CiphertextBackend", "MeshBackend",
+    "PipelinedExecutor", "Workload", "resolve_backend",
     "LatencyStats", "MetricsRegistry",
 ]

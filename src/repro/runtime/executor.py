@@ -1,7 +1,7 @@
 """Round-based serving engine: drains the slot batcher through a
 pipeline backend behind one interface.
 
-Two backends, one contract (``execute(schedule, batch, ...) -> seconds``):
+Three backends, one contract (``execute(schedule, batch, ...) -> seconds``):
 
 * ``AnalyticBackend`` — the MemoryModel cost model (core/pipeline.py)
   driven as a discrete-event simulation on a virtual clock. Stage
@@ -13,6 +13,11 @@ Two backends, one contract (``execute(schedule, batch, ...) -> seconds``):
   rank-to-rank via collective_permute, stage constants become
   device-resident arrays cached across batches, service time is wall
   clock.
+* ``CiphertextBackend`` (runtime/ciphertext_backend.py) — real encrypted
+  execution: batches are encrypted under the runtime's CKKS keys and
+  every schedule op runs as one vmapped dispatch over the ciphertext
+  stack, with decrypt-side accuracy recorded per workload. Wall clock,
+  per-stage measured times (the fig18 calibration source).
 
 ``PipelinedExecutor`` owns the event loop: admit arrivals → poll the
 batcher → compile (memoized) → execute → record completions.
@@ -209,10 +214,27 @@ class MeshBackend:
 # executor
 # ---------------------------------------------------------------------------
 
+def resolve_backend(name: str, params: CkksParams, mem: MemoryModel):
+    """Build a backend from its CLI/ctor name: ``analytic`` (cost model),
+    ``mesh`` (distributed placeholder stages), ``ciphertext`` (real
+    encrypted execution via repro.compiler.engine)."""
+    if name == "analytic":
+        return AnalyticBackend(mem)
+    if name == "mesh":
+        return MeshBackend(slots_per_ct=params.slots)
+    if name == "ciphertext":
+        from repro.runtime.ciphertext_backend import CiphertextBackend
+        return CiphertextBackend(params)
+    raise ValueError(f"unknown backend {name!r} "
+                     "(expected analytic|mesh|ciphertext)")
+
+
 class PipelinedExecutor:
     """Admission queue → slot batcher → compile cache → backend, driven
     on a virtual clock (event times from the analytic backend) or wall
-    clock deltas (mesh backend) — the loop is the same either way."""
+    clock deltas (mesh/ciphertext backends) — the loop is the same
+    either way. `backend` may be an instance or a name
+    ("analytic" | "mesh" | "ciphertext")."""
 
     def __init__(self, params: CkksParams, mem: MemoryModel,
                  backend=None, policy: Optional[BatchPolicy] = None,
@@ -224,6 +246,8 @@ class PipelinedExecutor:
         self.params = params
         self.mem = mem
         self.metrics = MetricsRegistry(n_partitions=mem.n_partitions)
+        if isinstance(backend, str):
+            backend = resolve_backend(backend, params, mem)
         self.backend = backend or AnalyticBackend(mem)
         self.policy = policy or BatchPolicy(slots_per_ct=params.slots)
         self.queue = AdmissionQueue(max_depth_per_tenant, self.metrics)

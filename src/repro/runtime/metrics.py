@@ -99,7 +99,15 @@ class MetricsRegistry:
         self.batch_service = LatencyStats("batch_service")
         self.occupancy = PartitionOccupancy(n_partitions)
         self.counters: Dict[str, int] = {}
+        # decrypt-side accuracy per workload (ciphertext backend):
+        # max |decoded - reference| over every slot of every batch served
+        self.decrypt_error: Dict[str, float] = {}
         self.elapsed_s = 0.0
+
+    def observe_decrypt_error(self, workload: str, err: float) -> None:
+        prev = self.decrypt_error.get(workload, 0.0)
+        self.decrypt_error[workload] = max(prev, float(err))
+        self.incr("accuracy_batches_checked")
 
     def incr(self, name: str, by: int = 1) -> None:
         self.counters[name] = self.counters.get(name, 0) + by
@@ -128,6 +136,7 @@ class MetricsRegistry:
             "compile_cache_hit_rate": self.hit_rate("compile"),
             "mean_partition_occupancy":
                 self.occupancy.mean_occupancy(self.elapsed_s),
+            "decrypt_error": dict(sorted(self.decrypt_error.items())),
             "counters": dict(sorted(self.counters.items())),
         }
 
@@ -144,6 +153,8 @@ class MetricsRegistry:
             f"compile hit rate      {s['compile_cache_hit_rate']*100:.1f} %",
             f"partition occupancy   {s['mean_partition_occupancy']*100:.1f} %",
         ]
+        for w, e in s["decrypt_error"].items():
+            lines.append(f"max |err| {w:<11} {e:.3e}")
         for k, v in s["counters"].items():
             lines.append(f"{k:<21} {v}")
         return "\n".join(lines)

@@ -282,6 +282,22 @@ def test_per_pass_decrypt_equality(ckks_interp, ckks_baselines,
         np.testing.assert_allclose(d, b, atol=2e-3)
 
 
+def test_interp_reencodes_rebound_consts(ckks_interp, rng):
+    """One engine instance serving two runs with DIFFERENT values for
+    the same const name must encode both — the engine's const memo is
+    keyed by value digest, not name alone (regression: a name-only key
+    silently served the first binding forever)."""
+    def prog(x, consts=None):
+        return x * consts["w"]
+    t = trace_program(prog, 1, const_names=("w",))
+    infer_levels(t, 3)
+    x = [0.3 * rng.normal(size=SLOTS)]
+    for _ in range(2):
+        w = 0.3 * rng.normal(size=SLOTS)
+        dec = ckks_interp.run(t, x, {"w": w})
+        np.testing.assert_allclose(dec[0], x[0] * w, atol=2e-3)
+
+
 @pytest.mark.parametrize("wname", list(WORKLOADS))
 def test_full_pipeline_decrypt_equality(ckks_interp, ckks_baselines,
                                         wname):

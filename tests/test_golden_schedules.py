@@ -1,0 +1,128 @@
+"""Golden regression tests for schedule / compile-cache-key stability.
+
+The serving runtime's whole caching story hangs on structural
+fingerprints: two captures of the same program must collide in the
+CompileCache, and an innocent-looking change to trace capture, level
+inference, a compiler pass, or the mapper silently invalidates every
+cached schedule (and recompiles on every request) — or worse, silently
+changes what gets served. These tests snapshot, for every workload in
+the serving registry under the smoke parameter set:
+
+* the captured trace's fingerprint (pre-optimization),
+* the optimized trace's fingerprint under the default PassConfig,
+* the full CompileCache key (params/mem/mapper/pass-config components),
+* the mapped schedule's shape (stages, rounds, per-stage op counts).
+
+If any of these drift, the diff in this file's golden JSON is the
+review artifact. Intentional changes regenerate it:
+
+    REGEN_GOLDENS=1 PYTHONPATH=src python -m pytest \
+        tests/test_golden_schedules.py
+"""
+import json
+import os
+
+import pytest
+
+from repro.compiler import PassConfig
+from repro.core.params import test_params as make_test_params
+from repro.core.pipeline import MemoryModel, generate_load_save_pipeline
+from repro.core.trace import trace_program
+from repro.runtime.compile_cache import (CompileCache, _mem_key, _params_key,
+                                         trace_fingerprint)
+from repro.runtime.workloads import (HELR_CONSTS, LOLA_CONSTS, lola_infer,
+                                     make_helr_iter, make_matvec,
+                                     make_poly_eval, matvec_consts,
+                                     poly_consts)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "schedules.json")
+
+# the serve_fhe --smoke setting: any drift here is a serving-visible
+# change by definition
+PARAMS = make_test_params(log_n=10, n_levels=8, dnum=2)
+MEM = MemoryModel(n_partitions=4, partition_bytes=8 * 2 ** 20)
+START = 7
+CFG = PassConfig(start_level=START)
+
+WORKLOADS = {
+    "helr": (make_helr_iter(), 2, HELR_CONSTS),
+    "lola": (lola_infer, 1, LOLA_CONSTS),
+    "matvec16": (make_matvec(16), 1, matvec_consts(16)),
+    "poly12": (make_poly_eval(12), 1, poly_consts(12)),
+}
+
+
+def snapshot() -> dict:
+    from repro.compiler import optimize_trace
+    out = {}
+    for name, (fn, n_in, consts) in WORKLOADS.items():
+        trace = trace_program(fn, n_in, const_names=consts)
+        opt, _ = optimize_trace(trace, PARAMS, CFG)
+        sched = generate_load_save_pipeline(opt, PARAMS, MEM)
+        out[name] = {
+            "trace_fingerprint": trace_fingerprint(trace),
+            "optimized_fingerprint": trace_fingerprint(opt),
+            "cache_key": {
+                "params": repr(_params_key(PARAMS)),
+                "mem": repr(_mem_key(MEM)),
+                "mapper": generate_load_save_pipeline.__name__,
+                "pass_config": repr(CFG.key()),
+            },
+            "n_ops_captured": len(trace.ops),
+            "n_ops_optimized": len(opt.ops),
+            "schedule": {
+                "n_stages": len(sched.stages),
+                "n_rounds": len(sched.rounds),
+                "stage_op_counts": [len(st.ops) for st in sched.stages],
+                "stage_partitions": [st.partition for st in sched.stages],
+            },
+        }
+    return out
+
+
+def test_golden_schedules_and_cache_keys():
+    got = snapshot()
+    if os.environ.get("REGEN_GOLDENS"):
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(got, f, indent=2, sort_keys=True)
+    assert os.path.exists(GOLDEN_PATH), \
+        "golden file missing — run with REGEN_GOLDENS=1 to create it"
+    want = json.load(open(GOLDEN_PATH))
+    assert sorted(got) == sorted(want), "workload registry changed"
+    for name in want:
+        for field in want[name]:
+            assert got[name][field] == want[name][field], (
+                f"{name}.{field} drifted — if intentional, regenerate "
+                f"with REGEN_GOLDENS=1 and review the golden diff")
+
+
+def test_fingerprints_stable_across_recapture():
+    """Same program text captured twice hashes identically (the property
+    the cache-sharing story depends on)."""
+    for name, (fn, n_in, consts) in WORKLOADS.items():
+        a = trace_program(fn, n_in, const_names=consts)
+        b = trace_program(fn, n_in, const_names=consts)
+        assert trace_fingerprint(a) == trace_fingerprint(b), name
+
+
+def test_compile_cache_key_changes_with_pass_config():
+    """Opt / no-opt schedules of one workload never collide (and the
+    golden cache-key snapshot would catch a key-schema change)."""
+    fn, n_in, consts = WORKLOADS["matvec16"]
+    trace = trace_program(fn, n_in, const_names=consts)
+    cc = CompileCache()
+    cc.get_schedule(trace, PARAMS, MEM, pass_config=CFG)
+    cc.get_schedule(trace, PARAMS, MEM,
+                    pass_config=CFG.with_passes(("bootstrap",)))
+    cc.get_schedule(trace, PARAMS, MEM, pass_config=None)
+    assert len(cc) == 3
+    assert cc.metrics.count("compile_misses") == 3
+    cc.get_schedule(trace, PARAMS, MEM, pass_config=CFG)
+    assert cc.metrics.count("compile_hits") == 1
+
+
+@pytest.mark.skipif(not os.environ.get("REGEN_GOLDENS"), reason="regen only")
+def test_regen_notice():
+    print(f"goldens regenerated at {GOLDEN_PATH}")

@@ -5,8 +5,7 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from _hyp import given, settings, st  # noqa: E402  (skips per-test)
 
 from repro.core.params import find_2nth_root, find_ntt_primes
 from repro.kernels import common, ops, ref

@@ -3,24 +3,30 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from _hyp import given, settings, st  # noqa: E402  (skips per-test)
 
 from repro.core import modarith as ma
-from repro.core.params import find_ntt_primes, is_prime, solinas_candidates
+from repro.core.params import (find_ntt_primes, generic_ntt_primes, is_prime,
+                               solinas_candidates)
 
-Q_SOLINAS = 2**30 - 2**18 + 1    # prime, NTT-friendly up to 2N=2^18
-Q_GENERIC = 998244353            # 119*2^23+1
+# word32 moduli straight from the repo's own NTT-prime search — prime by
+# construction (the search Miller-Rabin-filters every candidate), so the
+# old hand-picked list and its "non-prime test modulus" runtime skip are
+# gone for good.
+_SOLINAS_MOD = next(m for m in find_ntt_primes(30, 17, 4) if m.is_solinas)
+Q_SOLINAS = _SOLINAS_MOD.value               # 2^b - 2^s + 1 form
+_SOL_B, _SOL_S = _SOLINAS_MOD.solinas
+Q_GENERIC = generic_ntt_primes(30, 1 << 24, 1)[0]
+Q_WIDE = find_ntt_primes(31, 12, 1)[0].value   # widest word32 prime
 
 
 def _rand(rng, q, n=4096):
     return rng.integers(0, q, size=n, dtype=np.uint64)
 
 
-@pytest.mark.parametrize("q", [Q_SOLINAS, Q_GENERIC, (1 << 31) - 2**27 + 1])
+@pytest.mark.parametrize("q", [Q_SOLINAS, Q_GENERIC, Q_WIDE])
 def test_mulmod_paths_agree(rng, q):
-    if not is_prime(q):
-        pytest.skip("non-prime test modulus")
+    assert is_prime(q)          # by construction; never a skip
     a, b = _rand(rng, q), _rand(rng, q)
     ref = (a.astype(object) * b.astype(object)) % q
     aj, bj, qj = jnp.asarray(a), jnp.asarray(b), jnp.uint64(q)
@@ -37,7 +43,8 @@ def test_solinas_reduction(rng):
     q = Q_SOLINAS
     a, b = _rand(rng, q), _rand(rng, q)
     ref = (a.astype(object) * b.astype(object)) % q
-    got = ma.mulmod_solinas(jnp.asarray(a), jnp.asarray(b), jnp.uint64(q), 30, 18)
+    got = ma.mulmod_solinas(jnp.asarray(a), jnp.asarray(b), jnp.uint64(q),
+                            _SOL_B, _SOL_S)
     assert (np.asarray(got).astype(object) == ref).all()
 
 

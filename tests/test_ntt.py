@@ -3,8 +3,7 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from _hyp import given, settings, st  # noqa: E402  (skips per-test)
 
 from repro.core import modarith as ma
 from repro.core import ntt as nttm
