@@ -22,3 +22,18 @@ def timeit(fn, *args, warmup=1, iters=5):
 
 def row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}")
+
+
+def mem_profile(name):
+    """Flat MemoryModel of a named hardware preset — the same registry
+    (repro.pim.arch) `serve_fhe --mem-profile` and the pim backend use,
+    so benchmark sweeps and the serving CLI can never drift apart on
+    magic constants."""
+    from repro.pim.arch import memory_model
+    return memory_model(name)
+
+
+def pim_arch(name):
+    """Hierarchical arch of a named hardware preset (repro.pim.arch)."""
+    from repro.pim.arch import get_arch
+    return get_arch(name)

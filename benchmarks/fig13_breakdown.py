@@ -41,11 +41,12 @@ def main():
     per_ntt = t_ntt / (L + 1)
     per_mul_row = t_mul / (L + 1)
     est_ntt = c.ntts * per_ntt
-    est_mul = c.modmuls * per_mul_row
+    est_mul = (c.modmuls + c.ks_modmuls) * per_mul_row
     row("fig13_kso_est_ntt_phase", est_ntt * 1e6,
         f"{c.ntts} NTT passes ({100*est_ntt/(est_ntt+est_mul):.0f}%)")
     row("fig13_kso_est_mul_phase", est_mul * 1e6,
-        f"{c.modmuls} modmul rows ({100*est_mul/(est_ntt+est_mul):.0f}%)")
+        f"{c.modmuls}+{c.ks_modmuls}ks modmul rows "
+        f"({100*est_mul/(est_ntt+est_mul):.0f}%)")
 
 
 if __name__ == "__main__":

@@ -117,6 +117,29 @@ def fig18_table():
                   f"{r['max_decrypt_error']:.2e} | {r['tolerance']:.2e} |")
 
 
+def fig19_table():
+    path = os.path.join(RESULTS, "fig19_pim.jsonl")
+    if not os.path.exists(path):
+        return
+    recs = [json.loads(line) for line in open(path)]
+    totals = [r for r in recs if r["stage"] == "total"]
+    print("\n### Fig. 19 — PIM hierarchy model (FHEmem vs flat vs "
+          "HBM2-PIM-like, DES latency + compute/movement/load split)\n")
+    print("| workload | arch | stages | latency_ms | compute | movement | "
+          "load | speedup vs flat |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in totals:
+        print(f"| {r['workload']} | {r['arch']} | {r['n_stages']} | "
+              f"{r['latency_s'] * 1e3:.3f} | {r['compute_frac']*100:.0f}% | "
+              f"{r['move_frac']*100:.0f}% | {r['load_frac']*100:.0f}% | "
+              f"{r['speedup_vs_flat']:.2f}x |")
+    fhemem = [r for r in totals if r["arch"] == "fhemem"]
+    if fhemem:
+        best = max(fhemem, key=lambda r: r["speedup_vs_flat"])
+        print(f"\nBest FHEmem speedup over the flat model: "
+              f"{best['workload']} at {best['speedup_vs_flat']:.2f}x.")
+
+
 def pick_hillclimb():
     recs = [r for r in load("roofline.jsonl") if r["status"] == "ok"]
     by_rf = sorted((r for r in recs if r["shape"] != "long_500k"),
@@ -143,5 +166,7 @@ if __name__ == "__main__":
         fig17_table()
     if what in ("all", "fig18"):
         fig18_table()
+    if what in ("all", "fig19"):
+        fig19_table()
     if what in ("all", "pick"):
         pick_hillclimb()

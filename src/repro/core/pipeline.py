@@ -27,17 +27,34 @@ from repro.core.trace import FheOp, FheTrace, OpCost, ct_bytes, op_cost
 @dataclasses.dataclass
 class MemoryModel:
     """Abstract partitioned memory/compute (banks in the paper, device
-    groups on a TPU mesh here)."""
+    groups on a TPU mesh here).
+
+    This flat model is the degenerate case of the hierarchical FHEmem
+    model in ``repro/pim/arch.py``: ``PimArch.to_memory_model()`` derives
+    these rates from channel/bank/subarray geometry, and the pim
+    presets' flat member reproduces these defaults exactly.
+    """
     n_partitions: int = 16
     partition_bytes: int = 64 * 2 ** 20      # capacity per partition
     load_bw: float = 64e9                    # bytes/s constants into a partition
     modmul_throughput: float = 2.0e12        # N-coeff modmul rows/s equivalent
     ntt_row_cost: float = 1.0                # relative NTT pass cost vs modmul row
     transfer_bw: float = 256e9               # inter-partition bytes/s
+    ks_modmul_weight: float = 1.25           # digit-decomposition modmul rows
+    #                                          read gathered (non-resident)
+    #                                          operands: billed heavier than
+    #                                          plain rows
 
     def compute_seconds(self, c: OpCost, n: int) -> float:
-        rows = c.modmuls + self.ntt_row_cost * c.ntts * math.log2(max(n, 2))
-        return rows * n / self.modmul_throughput
+        """Seconds of partition-local work for one op: modmul rows (plain
+        + weighted keyswitch digit-decomposition rows) + NTT butterfly
+        passes + the op's own inter-partition data movement (rotation
+        permutations, ModUp/ModDown limb distribution) — previously the
+        last two channels were folded into plain modmul rows."""
+        rows = (c.modmuls + self.ks_modmul_weight * c.ks_modmuls
+                + self.ntt_row_cost * c.ntts * math.log2(max(n, 2)))
+        return (rows * n / self.modmul_throughput
+                + c.move_bytes / self.transfer_bw)
 
 
 @dataclasses.dataclass

@@ -173,11 +173,20 @@ class OpCost:
     const_bytes: int = 0     # evk / plaintext bytes this op must have resident
     io_bytes: int = 0        # ciphertext bytes read+written
     out_bytes: int = 0       # output ciphertext size
+    ks_modmuls: int = 0      # keyswitch digit-decomposition modmul rows (BConv
+    #                          MACs + evk mult-acc): operands are gathered
+    #                          across limb partitions, so hardware models may
+    #                          bill them heavier than resident-operand modmuls
+    move_bytes: int = 0      # ciphertext bytes the op moves between partitions
+    #                          (rotation slot permutation, ModUp digit
+    #                          distribution) — the PIM lowerer's XFER channel
 
     def __add__(self, o: "OpCost") -> "OpCost":
         return OpCost(self.ntts + o.ntts, self.modmuls + o.modmuls,
                       self.const_bytes + o.const_bytes,
-                      self.io_bytes + o.io_bytes, self.out_bytes)
+                      self.io_bytes + o.io_bytes, self.out_bytes,
+                      self.ks_modmuls + o.ks_modmuls,
+                      self.move_bytes + o.move_bytes)
 
 
 def ct_bytes(params: CkksParams, level: int) -> int:
@@ -191,26 +200,41 @@ def evk_bytes(params: CkksParams) -> int:
 
 def keyswitch_cost(params: CkksParams, level: int) -> OpCost:
     """Generalized KS at `level`: per digit iNTT+BConv+NTT (ModUp), evk
-    mult-accumulate, then 2x ModDown (iNTT+BConv+NTT+mul)."""
+    mult-accumulate, then 2x ModDown (iNTT+BConv+NTT+mul).
+
+    Digit-decomposition work (BConv MACs, evk mult-acc) lands in
+    ``ks_modmuls``, not ``modmuls``: those rows read operands gathered
+    from other limb partitions. The limbs each BConv *creates* in a
+    basis it does not own are billed as ``move_bytes`` — the inter-
+    partition traffic the paper's permutation network exists for.
+    """
     lp = level + 1
     k = params.n_special
     dnum = len([d for d in params.digit_indices(level)])
     alpha = params.alpha
     t = lp + k
+    limb_b = params.n * WORD
     ntts = 0
     modmuls = 0
+    ks_modmuls = 0
+    move_b = 0
     for d in range(dnum):
         dig = min(alpha, lp - d * alpha)
         ntts += dig              # iNTT digit
         ntts += (t - dig)        # NTT of converted limbs
-        modmuls += dig + dig * (t - dig)      # qhat_inv mul + bconv MACs
-        modmuls += 2 * t                      # evk mult-acc (b and a)
+        modmuls += dig                        # qhat_inv mul (resident)
+        ks_modmuls += dig * (t - dig)         # bconv MACs
+        ks_modmuls += 2 * t                   # evk mult-acc (b and a)
+        move_b += (t - dig) * limb_b          # ModUp digit distribution
     # ModDown x2: iNTT P part, BConv P->Q, NTT, final mul
     ntts += 2 * (k + lp)
-    modmuls += 2 * (k + k * lp + lp + lp)
+    modmuls += 2 * (lp + lp)                  # final scalar mul + sub-mul
+    ks_modmuls += 2 * (k + k * lp)            # P qhat_inv + bconv MACs
+    move_b += 2 * lp * limb_b                 # P->Q converted limbs
     return OpCost(ntts=ntts, modmuls=modmuls, const_bytes=evk_bytes(params),
                   io_bytes=2 * ct_bytes(params, level),
-                  out_bytes=ct_bytes(params, level))
+                  out_bytes=ct_bytes(params, level),
+                  ks_modmuls=ks_modmuls, move_bytes=move_b)
 
 
 def rescale_cost(params: CkksParams, level: int) -> OpCost:
@@ -252,7 +276,11 @@ def op_cost(params: CkksParams, op: FheOp) -> OpCost:
                    out_bytes=ct_bytes(params, l))
         return c + keyswitch_cost(params, l + 1) + rescale_cost(params, l + 1)
     if op.kind in ("rotate", "conjugate"):
-        return keyswitch_cost(params, l)
+        c = keyswitch_cost(params, l)
+        # the slot automorphism itself: every coefficient lands in a new
+        # position, crossing partitions on a limb-distributed layout
+        c.move_bytes += ct_bytes(params, l)
+        return c
     if op.kind == "rescale":
         return rescale_cost(params, l + 1)
     if op.kind == "bootstrap":

@@ -11,11 +11,22 @@ Backends: ``analytic`` (MemoryModel cost model, virtual clock),
 ``mesh`` (distributed placeholder stages, wall clock), ``ciphertext``
 (REAL encrypted execution through the batched CKKS engine — the run
 fails if any workload's max |decrypt error| exceeds the parameter
-set's CKKS tolerance).
+set's CKKS tolerance), ``pim`` (discrete-event simulation of the
+hierarchical FHEmem hardware model, repro.pim; pick the hardware
+point with ``--pim-preset``).
+
+``--mem-profile {flat,fhemem,hbm2}`` selects the memory model the
+mapper and analytic backend price against from the SAME preset
+registry the pim backend's hardware points come from
+(repro.pim.arch) — with ``--backend pim`` it defaults to the pim
+preset, so both sides of the fig19 comparison share one set of
+constants.
 
     PYTHONPATH=src python -m repro.launch.serve_fhe --smoke
     PYTHONPATH=src python -m repro.launch.serve_fhe --smoke \
         --backend ciphertext
+    PYTHONPATH=src python -m repro.launch.serve_fhe --smoke \
+        --backend pim --pim-preset fhemem
     PYTHONPATH=src python -m repro.launch.serve_fhe --backend mesh \
         --tenants 4 --requests 64 --rate 2000
 """
@@ -30,6 +41,8 @@ from repro.compiler import PassConfig
 from repro.core.params import CkksParams, test_params
 from repro.core.pipeline import MemoryModel
 from repro.core.trace import LevelBudgetExhausted
+from repro.pim.arch import PRESETS as PIM_PRESETS
+from repro.pim.arch import memory_model as pim_memory_model
 from repro.runtime import (BatchPolicy, KeyCache, PipelinedExecutor,
                            Request)
 
@@ -125,8 +138,20 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small params, few requests, fast end-to-end check")
-    ap.add_argument("--backend", choices=("analytic", "mesh", "ciphertext"),
+    ap.add_argument("--backend",
+                    choices=("analytic", "mesh", "ciphertext", "pim"),
                     default="analytic")
+    ap.add_argument("--pim-preset", choices=sorted(PIM_PRESETS),
+                    default="fhemem",
+                    help="hardware point for --backend pim "
+                         "(repro.pim.arch presets)")
+    ap.add_argument("--mem-profile", choices=sorted(PIM_PRESETS),
+                    default=None,
+                    help="price the pipeline against this preset's "
+                         "memory model instead of the built-in "
+                         "defaults (shared registry with the pim "
+                         "backend; defaults to --pim-preset when "
+                         "--backend pim)")
     ap.add_argument("--tenants", type=int, default=3)
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--rate", type=float, default=5000.0,
@@ -164,6 +189,21 @@ def main() -> None:
         params = paper_params_bootstrap()
         start_level = 20
         mem = MemoryModel(n_partitions=16, partition_bytes=96 * 2 ** 20)
+
+    # shared preset registry (repro.pim.arch): the pim backend recovers
+    # its arch from the mem via resolve_backend, so pricing and DES use
+    # the same hardware point by construction — which also means the
+    # two flags cannot name different points
+    profile = args.mem_profile
+    if args.backend == "pim":
+        if profile is not None and profile != args.pim_preset:
+            ap.error(f"--backend pim derives its hardware point from "
+                     f"the memory model, so --mem-profile {profile!r} "
+                     f"would silently override --pim-preset "
+                     f"{args.pim_preset!r}; pass one of them")
+        profile = args.pim_preset
+    if profile is not None:
+        mem = pim_memory_model(profile)
 
     # the ciphertext backend owns the ingress encryptor (payload values
     # are encrypted under the serving keys at pack time), so the

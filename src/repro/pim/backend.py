@@ -1,0 +1,98 @@
+"""`PimBackend` — discrete-event simulation of a lowered PIM
+instruction stream behind the runtime's backend contract
+(``execute(schedule, batch, ...) -> seconds``, DESIGN.md §9/§10).
+
+Schedules are lowered once (layout + instruction stream memoized per
+schedule object — schedules themselves live in the CompileCache, so
+steady-state serving never re-lowers) and every batch replays the
+stream on a virtual clock with the same round semantics as the
+analytic backend: within a round, a stage's busy time is its constant
+LOAD (KeyCache-aware: a resident stage loads nothing) plus
+max(compute+movement, output transfer) scaled by the batch; the round
+costs its worst stage plus pipeline fill. With a ``degenerate`` arch
+the per-stage buckets equal `PipelineSchedule.stage_times` to float
+precision, so AnalyticBackend and PimBackend(flat) agree within 1% —
+the regression that anchors the hierarchy model to the flat one.
+
+Per-workload compute/movement/load breakdowns of the last executed
+batch are kept on the backend (`last_breakdown`) for
+benchmarks/fig19_pim.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.pipeline import PipelineSchedule
+from repro.pim.arch import PimArch, arch_for_memory_model, get_arch
+from repro.pim.isa import PimProgram
+from repro.pim.layout import LayoutPlan, plan_layout
+from repro.pim.lower import lower_schedule
+
+
+class PimBackend:
+    """Hierarchical-hardware sibling of AnalyticBackend: same contract,
+    same virtual clock, but every second is accounted instruction by
+    instruction on a `PimArch` instead of the flat MemoryModel."""
+
+    def __init__(self, arch: Optional[PimArch] = None,
+                 preset: str = "fhemem"):
+        self.arch = arch if arch is not None else get_arch(preset)
+        # keyed by id(schedule); the schedule reference is retained so
+        # a recycled id can never alias a dead schedule
+        self._lowered: Dict[int, Tuple[PipelineSchedule, LayoutPlan,
+                                       PimProgram]] = {}
+        # workload -> per-stage {stage, load_s, compute_s, move_s} of
+        # the most recent batch (fig19's breakdown source)
+        self.last_breakdown: Dict[str, List[dict]] = {}
+
+    def program_for(self, schedule: PipelineSchedule) -> PimProgram:
+        key = id(schedule)
+        hit = self._lowered.get(key)
+        if hit is None or hit[0] is not schedule:
+            layout = plan_layout(schedule, self.arch)
+            prog = lower_schedule(schedule, self.arch, layout)
+            self._lowered[key] = (schedule, layout, prog)
+            return prog
+        return hit[2]
+
+    def layout_for(self, schedule: PipelineSchedule) -> LayoutPlan:
+        self.program_for(schedule)
+        return self._lowered[id(schedule)][1]
+
+    def execute(self, schedule: PipelineSchedule, batch, *,
+                key_cache, metrics, workload: str) -> float:
+        prog = self.program_for(schedule)
+        b = max(1, batch.n_ciphertexts)
+        breakdown: List[dict] = []
+        total = 0.0
+        for rnd in schedule.rounds:
+            round_times = []
+            for st in rnd:
+                load_s, comp_s, move_s, out_s = prog.stage_seconds(st.idx)
+                if schedule.reload_per_op:
+                    # constants overflow the bank: every input re-streams
+                    load_s *= b
+                elif key_cache is not None:
+                    _, _, load_s = key_cache.get_or_load(
+                        (workload, "stage", st.idx), st.const_bytes)
+                exec_s = b * (comp_s + move_s)
+                xfer_s = b * out_s
+                busy = load_s + max(exec_s, xfer_s)
+                metrics.occupancy.add(st.partition, busy)
+                round_times.append((busy, exec_s, xfer_s))
+                breakdown.append({
+                    "stage": st.idx, "partition": st.partition,
+                    "load_s": load_s, "compute_s": b * comp_s,
+                    "move_s": b * move_s + xfer_s, "busy_s": busy})
+            worst = max(t[0] for t in round_times)
+            fill = sum(max(e, x) / b for (_, e, x) in round_times)
+            total += worst + fill
+        self.last_breakdown[workload] = breakdown
+        return total
+
+
+def resolve_pim_backend(mem) -> PimBackend:
+    """Backend for `resolve_backend("pim", ...)`: recover the arch the
+    MemoryModel was projected from (preset match), else wrap the mem in
+    a degenerate arch that bills identically to AnalyticBackend."""
+    return PimBackend(arch=arch_for_memory_model(mem))

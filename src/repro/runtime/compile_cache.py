@@ -43,7 +43,8 @@ def _params_key(params: CkksParams) -> Tuple:
 
 def _mem_key(mem: MemoryModel) -> Tuple:
     return (mem.n_partitions, mem.partition_bytes, mem.load_bw,
-            mem.modmul_throughput, mem.ntt_row_cost, mem.transfer_bw)
+            mem.modmul_throughput, mem.ntt_row_cost, mem.transfer_bw,
+            mem.ks_modmul_weight)
 
 
 class CompileCache:

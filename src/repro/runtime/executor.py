@@ -1,7 +1,7 @@
 """Round-based serving engine: drains the slot batcher through a
 pipeline backend behind one interface.
 
-Three backends, one contract (``execute(schedule, batch, ...) -> seconds``):
+Four backends, one contract (``execute(schedule, batch, ...) -> seconds``):
 
 * ``AnalyticBackend`` — the MemoryModel cost model (core/pipeline.py)
   driven as a discrete-event simulation on a virtual clock. Stage
@@ -18,6 +18,11 @@ Three backends, one contract (``execute(schedule, batch, ...) -> seconds``):
   every schedule op runs as one vmapped dispatch over the ciphertext
   stack, with decrypt-side accuracy recorded per workload. Wall clock,
   per-stage measured times (the fig18 calibration source).
+* ``PimBackend`` (repro/pim/backend.py) — discrete-event simulation of
+  the hierarchical FHEmem hardware model: schedules are lowered to a
+  bank-level instruction stream (repro.pim.lower) and replayed on a
+  virtual clock; the degenerate flat arch reproduces AnalyticBackend
+  stage times exactly (DESIGN.md §10).
 
 ``PipelinedExecutor`` owns the event loop: admit arrivals → poll the
 batcher → compile (memoized) → execute → record completions.
@@ -217,7 +222,11 @@ class MeshBackend:
 def resolve_backend(name: str, params: CkksParams, mem: MemoryModel):
     """Build a backend from its CLI/ctor name: ``analytic`` (cost model),
     ``mesh`` (distributed placeholder stages), ``ciphertext`` (real
-    encrypted execution via repro.compiler.engine)."""
+    encrypted execution via repro.compiler.engine), ``pim``
+    (discrete-event simulation of the hierarchical FHEmem hardware
+    model, repro.pim — the arch is recovered from `mem`: a preset
+    projection maps back to its preset, anything else is wrapped in a
+    degenerate arch billing exactly like AnalyticBackend)."""
     if name == "analytic":
         return AnalyticBackend(mem)
     if name == "mesh":
@@ -225,8 +234,11 @@ def resolve_backend(name: str, params: CkksParams, mem: MemoryModel):
     if name == "ciphertext":
         from repro.runtime.ciphertext_backend import CiphertextBackend
         return CiphertextBackend(params)
+    if name == "pim":
+        from repro.pim.backend import resolve_pim_backend
+        return resolve_pim_backend(mem)
     raise ValueError(f"unknown backend {name!r} "
-                     "(expected analytic|mesh|ciphertext)")
+                     "(expected analytic|mesh|ciphertext|pim)")
 
 
 class PipelinedExecutor:
@@ -234,7 +246,7 @@ class PipelinedExecutor:
     on a virtual clock (event times from the analytic backend) or wall
     clock deltas (mesh/ciphertext backends) — the loop is the same
     either way. `backend` may be an instance or a name
-    ("analytic" | "mesh" | "ciphertext")."""
+    ("analytic" | "mesh" | "ciphertext" | "pim")."""
 
     def __init__(self, params: CkksParams, mem: MemoryModel,
                  backend=None, policy: Optional[BatchPolicy] = None,

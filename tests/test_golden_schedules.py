@@ -13,6 +13,12 @@ the serving registry under the smoke parameter set:
 * the full CompileCache key (params/mem/mapper/pass-config components),
 * the mapped schedule's shape (stages, rounds, per-stage op counts).
 
+A second golden (tests/golden/pim_streams.json) snapshots the FULL
+bank-level PIM instruction stream (repro.pim.lower) of two fixed
+workloads on the ``fhemem`` arch: any drift in the ISA, the layout
+mapper, the cycle model, or the OpCost channels it consumes fails
+loudly here instead of silently rescaling every fig19 number.
+
 If any of these drift, the diff in this file's golden JSON is the
 review artifact. Intentional changes regenerate it:
 
@@ -96,6 +102,46 @@ def test_golden_schedules_and_cache_keys():
             assert got[name][field] == want[name][field], (
                 f"{name}.{field} drifted — if intentional, regenerate "
                 f"with REGEN_GOLDENS=1 and review the golden diff")
+
+
+PIM_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                               "pim_streams.json")
+# two fixed workloads: the rotation-tree deep one and the BSGS matvec
+PIM_WORKLOADS = ("helr", "matvec16")
+
+
+def snapshot_pim() -> dict:
+    from repro.compiler import optimize_trace
+    from repro.pim import get_arch, lower_schedule
+    arch = get_arch("fhemem")
+    out = {}
+    for name in PIM_WORKLOADS:
+        fn, n_in, consts = WORKLOADS[name]
+        trace = trace_program(fn, n_in, const_names=consts)
+        opt, _ = optimize_trace(trace, PARAMS, CFG)
+        sched = generate_load_save_pipeline(opt, PARAMS, MEM)
+        out[name] = lower_schedule(sched, arch).to_jsonable()
+    return out
+
+
+def test_golden_pim_instruction_streams():
+    got = snapshot_pim()
+    if os.environ.get("REGEN_GOLDENS"):
+        os.makedirs(os.path.dirname(PIM_GOLDEN_PATH), exist_ok=True)
+        with open(PIM_GOLDEN_PATH, "w") as f:
+            json.dump(got, f, indent=2, sort_keys=True)
+    assert os.path.exists(PIM_GOLDEN_PATH), \
+        "golden file missing — run with REGEN_GOLDENS=1 to create it"
+    want = json.load(open(PIM_GOLDEN_PATH))
+    assert sorted(got) == sorted(want), "pim golden workload set changed"
+    for name in want:
+        for field in ("arch", "freq_hz", "n_stages", "summary"):
+            assert got[name][field] == want[name][field], (
+                f"{name}.{field} drifted — if intentional, regenerate "
+                f"with REGEN_GOLDENS=1 and review the golden diff")
+        assert got[name]["instrs"] == want[name]["instrs"], (
+            f"{name} instruction stream drifted — if intentional, "
+            f"regenerate with REGEN_GOLDENS=1 and review the diff")
 
 
 def test_fingerprints_stable_across_recapture():
