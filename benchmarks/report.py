@@ -140,6 +140,41 @@ def fig19_table():
               f"{best['workload']} at {best['speedup_vs_flat']:.2f}x.")
 
 
+def fig20_table():
+    path = os.path.join(RESULTS, "fig20_fleet.jsonl")
+    if not os.path.exists(path):
+        return
+    recs = [json.loads(line) for line in open(path)]
+    sweep = [r for r in recs if r["figure"] == "sweep"]
+    print("\n### Fig. 20 — fleet serving (offered load vs goodput, "
+          "least_loaded routing)\n")
+    print("| devices | load | offered req/s | goodput req/s | "
+          "thru req/s | p99_ms | qdelay p99_ms | occupancy |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(sweep, key=lambda r: (r["devices"], r["load_mult"])):
+        print(f"| {r['devices']} | {r['load_mult']:g}x | "
+              f"{r['offered_rps']:.0f} | {r['goodput_rps']:.0f} | "
+              f"{r['throughput_rps']:.0f} | {r['p99_s'] * 1e3:.3f} | "
+              f"{r['queue_delay_p99_s'] * 1e3:.3f} | "
+              f"{r['mean_device_occupancy'] * 100:.0f}% |")
+    abl = [r for r in recs if r["figure"] == "ablation"]
+    if abl:
+        print("\n| router (4 dev, small caches, slow load) | "
+              "goodput req/s | routing hit | keycache hit | p99_ms |")
+        print("|---|---|---|---|---|")
+        for r in abl:
+            print(f"| {r['router']} | {r['goodput_rps']:.0f} | "
+                  f"{r['routing_hit_rate'] * 100:.0f}% | "
+                  f"{r['keycache_hit_rate'] * 100:.0f}% | "
+                  f"{r['p99_s'] * 1e3:.3f} |")
+    top = max(r["load_mult"] for r in sweep) if sweep else 0
+    pts = {r["devices"]: r["goodput_rps"] for r in sweep
+           if r["load_mult"] == top}
+    if 1 in pts and 4 in pts and pts[1] > 0:
+        print(f"\nGoodput scaling at {top:g}x load: "
+              f"{pts[4] / pts[1]:.2f}x from 1 -> 4 devices.")
+
+
 def pick_hillclimb():
     recs = [r for r in load("roofline.jsonl") if r["status"] == "ok"]
     by_rf = sorted((r for r in recs if r["shape"] != "long_500k"),
@@ -168,5 +203,7 @@ if __name__ == "__main__":
         fig18_table()
     if what in ("all", "fig19"):
         fig19_table()
+    if what in ("all", "fig20"):
+        fig20_table()
     if what in ("all", "pick"):
         pick_hillclimb()

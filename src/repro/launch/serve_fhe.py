@@ -43,6 +43,7 @@ from repro.core.pipeline import MemoryModel
 from repro.core.trace import LevelBudgetExhausted
 from repro.pim.arch import PRESETS as PIM_PRESETS
 from repro.pim.arch import memory_model as pim_memory_model
+from repro.fleet.router import POLICIES as ROUTER_POLICIES
 from repro.runtime import (BatchPolicy, KeyCache, PipelinedExecutor,
                            Request)
 
@@ -84,7 +85,34 @@ def build_executor(params: CkksParams, mem: MemoryModel, *,
     return ex
 
 
-def synth_arrivals(ex: PipelinedExecutor, *, n_tenants: int, n_requests: int,
+def build_fleet_scheduler(params: CkksParams, mem: MemoryModel, *,
+                          n_devices: int, backend_name: str, router: str,
+                          max_batch: int, max_wait_s: float,
+                          cache_bytes: int, start_level: int,
+                          opt: bool = True, continuous_batching: bool = False,
+                          preempt: bool = False):
+    """Fleet-mode mirror of build_executor: N devices (each with its own
+    backend instance and caches), one router, one scheduler."""
+    from repro.fleet import FleetScheduler
+    policy = BatchPolicy(slots_per_ct=params.slots, max_batch=max_batch,
+                         max_wait_s=max_wait_s)
+    fleet = FleetScheduler(
+        params, mem, n_devices=n_devices, backend=backend_name,
+        router=router, policy=policy, cache_bytes=cache_bytes,
+        pass_config=PassConfig() if opt else None,
+        continuous_batching=continuous_batching, preempt=preempt)
+    for name, (fn, n_in, consts) in WORKLOADS.items():
+        try:
+            fleet.register(name, fn, n_in, const_names=consts,
+                           start_level=start_level)
+        except LevelBudgetExhausted:
+            print(f"skipping workload {name!r}: deeper than "
+                  f"start_level={start_level} and --no-opt disables "
+                  f"automatic bootstrap insertion")
+    return fleet
+
+
+def synth_arrivals(ex, *, n_tenants: int, n_requests: int,
                    rate_rps: float, seed: int, deadline_s: float,
                    encrypt: bool, max_slots: int) -> list:
     """Poisson arrivals from round-robin tenants, alternating workloads.
@@ -125,7 +153,7 @@ def synth_arrivals(ex: PipelinedExecutor, *, n_tenants: int, n_requests: int,
         if enc is not None:
             payload = enc(vals)
         arrivals.append(Request(
-            ex.queue.next_request_id(),
+            ex.next_request_id(),
             tenant=f"tenant{i % n_tenants}",
             workload=names[i % len(names)],
             arrival_s=t, slots_needed=slots,
@@ -152,6 +180,19 @@ def main() -> None:
                          "defaults (shared registry with the pim "
                          "backend; defaults to --pim-preset when "
                          "--backend pim)")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve on a simulated fleet of N devices "
+                         "(repro.fleet), each wrapping its own "
+                         "--backend instance; 0 = single executor")
+    ap.add_argument("--router", choices=ROUTER_POLICIES,
+                    default="round_robin",
+                    help="fleet admission-time placement policy")
+    ap.add_argument("--continuous-batching", action="store_true",
+                    help="fleet: refill free slot rows of in-flight "
+                         "batches between pipeline rounds")
+    ap.add_argument("--preempt", action="store_true",
+                    help="fleet: preempt best-effort batches at round "
+                         "boundaries when a deadline batch is ready")
     ap.add_argument("--tenants", type=int, default=3)
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--rate", type=float, default=5000.0,
@@ -209,28 +250,46 @@ def main() -> None:
     # are encrypted under the serving keys at pack time), so the
     # synthetic foreign-key ciphertext wrapping is redundant there
     encrypt = not args.no_encrypt and args.backend != "ciphertext"
-    ex = build_executor(params, mem, backend_name=args.backend,
-                        max_batch=args.max_batch,
-                        max_wait_s=args.max_wait_ms * 1e-3,
-                        cache_bytes=args.cache_mb * 2 ** 20,
-                        start_level=start_level, opt=args.opt)
+    if args.fleet > 0:
+        ex = build_fleet_scheduler(
+            params, mem, n_devices=args.fleet, backend_name=args.backend,
+            router=args.router, max_batch=args.max_batch,
+            max_wait_s=args.max_wait_ms * 1e-3,
+            cache_bytes=args.cache_mb * 2 ** 20,
+            start_level=start_level, opt=args.opt,
+            continuous_batching=args.continuous_batching,
+            preempt=args.preempt)
+    else:
+        ex = build_executor(params, mem, backend_name=args.backend,
+                            max_batch=args.max_batch,
+                            max_wait_s=args.max_wait_ms * 1e-3,
+                            cache_bytes=args.cache_mb * 2 ** 20,
+                            start_level=start_level, opt=args.opt)
     arrivals = synth_arrivals(
         ex, n_tenants=args.tenants, n_requests=args.requests,
         rate_rps=args.rate, seed=args.seed,
         deadline_s=args.deadline_ms * 1e-3,
         encrypt=encrypt, max_slots=min(128, params.slots))
 
+    cache_tag = "off" if args.cache_mb <= 0 else f"{args.cache_mb}MiB"
+    fleet_tag = (f"fleet of {args.fleet} ({args.router} router"
+                 f"{', continuous batching' if args.continuous_batching else ''}"
+                 f"{', preemption' if args.preempt else ''}), "
+                 if args.fleet > 0 else "")
     print(f"serving {len(arrivals)} requests from {args.tenants} tenants "
-          f"({args.backend} backend, key cache "
-          f"{'off' if ex.key_cache is None else f'{args.cache_mb}MiB'}, "
+          f"({fleet_tag}{args.backend} backend, key cache {cache_tag}, "
           f"compiler {'on' if args.opt else 'off'})")
-    warm_s = ex.warmup()
-    print(f"warmup (compile + key preload): {warm_s:.2f} s")
+    import time as _time
+    t0 = _time.perf_counter()
+    ex.warmup()
+    print(f"warmup (compile + key preload): "
+          f"{_time.perf_counter() - t0:.2f} s")
     m = ex.serve(arrivals)
     print(m.format_table())
 
     if args.backend == "ciphertext":
-        tol = ex.backend.tolerance
+        tol = (ex.devices[0].backend if args.fleet > 0
+               else ex.backend).tolerance
         failed = False
         for w in ex.workloads:
             err = m.decrypt_error.get(w)

@@ -59,34 +59,47 @@ class PimBackend:
         self.program_for(schedule)
         return self._lowered[id(schedule)][1]
 
-    def execute(self, schedule: PipelineSchedule, batch, *,
-                key_cache, metrics, workload: str) -> float:
+    def round_seconds(self, schedule: PipelineSchedule, rnd, b: int, *,
+                      key_cache, metrics, workload: str,
+                      breakdown: Optional[List[dict]] = None) -> float:
+        """One pipeline round of the lowered instruction stream at batch
+        occupancy ``b`` — the simulation unit the fleet's
+        continuous-batching path steps (same contract as
+        AnalyticBackend.round_seconds)."""
         prog = self.program_for(schedule)
-        b = max(1, batch.n_ciphertexts)
-        breakdown: List[dict] = []
-        total = 0.0
-        for rnd in schedule.rounds:
-            round_times = []
-            for st in rnd:
-                load_s, comp_s, move_s, out_s = prog.stage_seconds(st.idx)
-                if schedule.reload_per_op:
-                    # constants overflow the bank: every input re-streams
-                    load_s *= b
-                elif key_cache is not None:
-                    _, _, load_s = key_cache.get_or_load(
-                        (workload, "stage", st.idx), st.const_bytes)
-                exec_s = b * (comp_s + move_s)
-                xfer_s = b * out_s
-                busy = load_s + max(exec_s, xfer_s)
-                metrics.occupancy.add(st.partition, busy)
-                round_times.append((busy, exec_s, xfer_s))
+        round_times = []
+        for st in rnd:
+            load_s, comp_s, move_s, out_s = prog.stage_seconds(st.idx)
+            if schedule.reload_per_op:
+                # constants overflow the bank: every input re-streams
+                load_s *= b
+            elif key_cache is not None:
+                _, _, load_s = key_cache.get_or_load(
+                    (workload, "stage", st.idx), st.const_bytes)
+            exec_s = b * (comp_s + move_s)
+            xfer_s = b * out_s
+            busy = load_s + max(exec_s, xfer_s)
+            metrics.occupancy.add(st.partition, busy)
+            round_times.append((busy, exec_s, xfer_s))
+            if breakdown is not None:
                 breakdown.append({
                     "stage": st.idx, "partition": st.partition,
                     "load_s": load_s, "compute_s": b * comp_s,
                     "move_s": b * move_s + xfer_s, "busy_s": busy})
-            worst = max(t[0] for t in round_times)
-            fill = sum(max(e, x) / b for (_, e, x) in round_times)
-            total += worst + fill
+        worst = max(t[0] for t in round_times)
+        fill = sum(max(e, x) / b for (_, e, x) in round_times)
+        return worst + fill
+
+    def execute(self, schedule: PipelineSchedule, batch, *,
+                key_cache, metrics, workload: str) -> float:
+        b = max(1, batch.n_ciphertexts)
+        breakdown: List[dict] = []
+        total = 0.0
+        for rnd in schedule.rounds:
+            total += self.round_seconds(schedule, rnd, b,
+                                        key_cache=key_cache,
+                                        metrics=metrics, workload=workload,
+                                        breakdown=breakdown)
         self.last_breakdown[workload] = breakdown
         return total
 

@@ -58,14 +58,25 @@ class Batch:
 
 
 def pack_slot_groups(requests: List[Request], slots_per_ct: int,
-                     max_groups: int) -> tuple:
+                     max_groups: int,
+                     groups: Optional[List[List[Request]]] = None,
+                     free: Optional[List[int]] = None) -> tuple:
     """First-fit-decreasing bin packing of requests into ciphertexts.
 
     Returns (groups, overflow): requests that would need a group beyond
     ``max_groups`` — or that alone exceed ``slots_per_ct`` — overflow.
+
+    ``groups``/``free`` seed the packer with an in-flight batch's
+    existing ciphertext rows and their free slot capacity (continuous
+    batching: new requests first-fit into free rows of a batch already
+    streaming through the pipeline). Both are mutated in place.
     """
-    groups: List[List[Request]] = []
-    free: List[int] = []
+    if groups is None:
+        groups = []
+    if free is None:
+        free = [slots_per_ct - sum(r.slots_needed for r in g)
+                for g in groups]
+    assert len(free) == len(groups)
     overflow: List[Request] = []
     for r in sorted(requests, key=lambda r: -r.slots_needed):
         if r.slots_needed > slots_per_ct:
@@ -105,6 +116,11 @@ class SlotBatcher:
         dl = self.queue.earliest_deadline(now, workload)
         return dl is not None and dl - now <= p.deadline_slack_s
 
+    def should_fire(self, now: float, workload: str) -> bool:
+        """Public fire predicate (the fleet scheduler's preemption
+        trigger checks it without forming a batch)."""
+        return self._should_fire(now, workload)
+
     def next_fire_time(self, now: float) -> Optional[float]:
         """Earliest future instant any workload's max-wait clock fires
         (virtual-clock executors advance to this when idle)."""
@@ -121,40 +137,85 @@ class SlotBatcher:
                 best = t
         return best
 
-    def poll(self, now: float) -> Optional[Batch]:
+    def poll(self, now: float,
+             order: Optional[List[str]] = None) -> Optional[Batch]:
         """Form at most one batch. Requests of different workloads never
         share a batch (they compile to different schedules); workloads
-        are served in first-arrival order."""
-        p = self.policy
-        for workload in self.queue.pending_workloads(now):
-            if not self._should_fire(now, workload):
-                continue
-            taken = self.queue.take(now, workload,
-                                    max_requests=p.capacity_slots,
-                                    max_slots=p.capacity_slots)
-            groups, overflow = pack_slot_groups(taken, p.slots_per_ct,
-                                                p.max_batch)
-            # requeue latest-arrival first so appendleft leaves each
-            # tenant's queue in arrival order (overflow comes out of the
-            # packer size-sorted, not arrival-sorted)
-            for r in sorted(overflow, key=lambda r: r.arrival_s,
-                            reverse=True):
-                if r.slots_needed > p.slots_per_ct:
-                    # can never fit in one ciphertext — unservable
-                    r.status = RequestStatus.REJECTED
-                    self.metrics.incr("requests_oversized")
-                else:
-                    self.queue.requeue(r)
-                    self.metrics.incr("batcher_overflow_requeued")
-            if not groups:
-                continue
-            batch = Batch(workload, [r for g in groups for r in g],
-                          groups, formed_s=now)
-            # wait is observed here, not in take(): a requeued overflow
-            # request must be sampled once, on the batch it ships in
-            for r in batch.requests:
-                self.metrics.queue_wait.observe(max(0.0, now - r.arrival_s))
-            self.metrics.incr("batches_formed")
-            self.metrics.incr("ciphertexts_batched", batch.n_ciphertexts)
-            return batch
+        are served in first-arrival order unless ``order`` overrides it
+        (the fleet scheduler passes an earliest-deadline-first order)."""
+        if order is None:
+            order = self.queue.pending_workloads(now)
+        for workload in order:
+            batch = self.poll_workload(now, workload)
+            if batch is not None:
+                return batch
         return None
+
+    def poll_workload(self, now: float, workload: str) -> Optional[Batch]:
+        """Form a batch of one workload if its fire condition holds."""
+        p = self.policy
+        if not self._should_fire(now, workload):
+            return None
+        taken = self.queue.take(now, workload,
+                                max_requests=p.capacity_slots,
+                                max_slots=p.capacity_slots)
+        groups, overflow = pack_slot_groups(taken, p.slots_per_ct,
+                                            p.max_batch)
+        self._requeue_overflow(overflow)
+        if not groups:
+            return None
+        batch = Batch(workload, [r for g in groups for r in g],
+                      groups, formed_s=now)
+        # wait is observed here, not in take(): a requeued overflow
+        # request must be sampled once, on the batch it ships in
+        for r in batch.requests:
+            self.metrics.queue_wait.observe(max(0.0, now - r.arrival_s))
+        self.metrics.incr("batches_formed")
+        self.metrics.incr("ciphertexts_batched", batch.n_ciphertexts)
+        return batch
+
+    def _requeue_overflow(self, overflow: List[Request]) -> None:
+        # requeue latest-arrival first so appendleft leaves each
+        # tenant's queue in arrival order (overflow comes out of the
+        # packer size-sorted, not arrival-sorted)
+        p = self.policy
+        for r in sorted(overflow, key=lambda r: r.arrival_s,
+                        reverse=True):
+            if r.slots_needed > p.slots_per_ct:
+                # can never fit in one ciphertext — unservable
+                r.status = RequestStatus.REJECTED
+                self.metrics.incr("requests_oversized")
+            else:
+                self.queue.requeue(r)
+                self.metrics.incr("batcher_overflow_requeued")
+
+    def refill(self, now: float, workload: str,
+               groups: List[List[Request]], free: List[int],
+               max_groups: int) -> List[Request]:
+        """Continuous batching: pull queued requests of ``workload``
+        into the free slot rows of an in-flight batch (called between
+        pipeline rounds). No fire condition — free capacity in a
+        streaming batch is strictly cheaper than waiting for a new
+        batch to form. Returns the joined requests; ``groups``/``free``
+        are extended in place. Requests of other workloads are never
+        pulled (they compile to a different schedule)."""
+        budget = sum(free) + \
+            max(0, max_groups - len(groups)) * self.policy.slots_per_ct
+        if budget <= 0:
+            return []
+        taken = self.queue.take(now, workload,
+                                max_requests=budget, max_slots=budget)
+        if not taken:
+            return []
+        before = {id(r) for g in groups for r in g}
+        _, overflow = pack_slot_groups(taken, self.policy.slots_per_ct,
+                                       max_groups, groups=groups,
+                                       free=free)
+        self._requeue_overflow(overflow)
+        joined = [r for g in groups for r in g if id(r) not in before]
+        for r in joined:
+            self.metrics.queue_wait.observe(max(0.0, now - r.arrival_s))
+        if joined:
+            self.metrics.incr("continuous_refills")
+            self.metrics.incr("requests_refilled", len(joined))
+        return joined

@@ -60,36 +60,50 @@ class Workload:
 # ---------------------------------------------------------------------------
 
 class AnalyticBackend:
-    """Virtual-clock service-time model with cache-aware constant loads."""
+    """Virtual-clock service-time model with cache-aware constant loads.
+
+    ``round_seconds`` is the unit of simulation: one pipeline round at
+    a given batch occupancy. ``execute`` sums it over the schedule's
+    rounds; the fleet's continuous-batching/preemption path
+    (repro.fleet.device) calls it round by round so batch membership
+    can change at round boundaries.
+    """
 
     def __init__(self, mem: MemoryModel):
         self.mem = mem
 
-    def execute(self, schedule: PipelineSchedule, batch: Batch, *,
-                key_cache: Optional[KeyCache],
-                metrics: MetricsRegistry, workload: str) -> float:
-        b = max(1, batch.n_ciphertexts)
+    def round_seconds(self, schedule: PipelineSchedule, rnd, b: int, *,
+                      key_cache: Optional[KeyCache],
+                      metrics: MetricsRegistry, workload: str) -> float:
         # the schedule's own cost model is the single source of truth;
         # the key cache only substitutes the load term: a resident
         # stage streams nothing (reload_per_op stages overflow the
         # partition, so residency cannot help them by construction)
         times = schedule.stage_times(b)
+        round_times = []
+        for st in rnd:
+            load, compute, transfer = times[st.idx]
+            if key_cache is not None and not schedule.reload_per_op:
+                _, _, load = key_cache.get_or_load(
+                    (workload, "stage", st.idx), st.const_bytes)
+            busy = load + max(compute, transfer)
+            round_times.append((busy, compute, transfer))
+            metrics.occupancy.add(st.partition, busy)
+        # within a round stages overlap (pipelined): worst stage
+        # bounds the steady state, plus pipeline fill
+        worst = max(t[0] for t in round_times)
+        fill = sum(max(c, t) / b for (_, c, t) in round_times)
+        return worst + fill
+
+    def execute(self, schedule: PipelineSchedule, batch: Batch, *,
+                key_cache: Optional[KeyCache],
+                metrics: MetricsRegistry, workload: str) -> float:
+        b = max(1, batch.n_ciphertexts)
         total = 0.0
         for rnd in schedule.rounds:
-            round_times = []
-            for st in rnd:
-                load, compute, transfer = times[st.idx]
-                if key_cache is not None and not schedule.reload_per_op:
-                    _, _, load = key_cache.get_or_load(
-                        (workload, "stage", st.idx), st.const_bytes)
-                busy = load + max(compute, transfer)
-                round_times.append((busy, compute, transfer))
-                metrics.occupancy.add(st.partition, busy)
-            # within a round stages overlap (pipelined): worst stage
-            # bounds the steady state, plus pipeline fill
-            worst = max(t[0] for t in round_times)
-            fill = sum(max(c, t) / b for (_, c, t) in round_times)
-            total += worst + fill
+            total += self.round_seconds(schedule, rnd, b,
+                                        key_cache=key_cache,
+                                        metrics=metrics, workload=workload)
         return total
 
 
@@ -219,6 +233,34 @@ class MeshBackend:
 # executor
 # ---------------------------------------------------------------------------
 
+def record_request_completion(metrics: MetricsRegistry, r: Request,
+                              done: float, service_start_s: float) -> bool:
+    """One request leaves the system: deadline check, latency +
+    queue-delay/service-time decomposition, per-tenant attribution.
+    Shared by the single executor and every fleet device so their
+    accounting can never drift. Returns True iff completed in time."""
+    r.completion_s = done
+    r.service_start_s = service_start_s
+    metrics.incr("requests_served")
+    if r.deadline_s is not None and done > r.deadline_s:
+        r.status = RequestStatus.DEADLINE_MISS
+        metrics.incr("deadline_misses")
+        metrics.incr_tenant("deadline_misses", r.tenant)
+        return False
+    r.status = RequestStatus.COMPLETED
+    metrics.request_latency.observe(r.latency())
+    metrics.queue_delay.observe(max(0.0, service_start_s - r.arrival_s))
+    metrics.service_time.observe(max(0.0, done - service_start_s))
+    metrics.incr("requests_completed")
+    metrics.incr_tenant("requests_completed", r.tenant)
+    if r.deadline_s is not None:
+        metrics.incr("requests_goodput")
+    return True
+
+
+BACKEND_NAMES = ("analytic", "mesh", "ciphertext", "pim")
+
+
 def resolve_backend(name: str, params: CkksParams, mem: MemoryModel):
     """Build a backend from its CLI/ctor name: ``analytic`` (cost model),
     ``mesh`` (distributed placeholder stages), ``ciphertext`` (real
@@ -237,8 +279,13 @@ def resolve_backend(name: str, params: CkksParams, mem: MemoryModel):
     if name == "pim":
         from repro.pim.backend import resolve_pim_backend
         return resolve_pim_backend(mem)
-    raise ValueError(f"unknown backend {name!r} "
-                     "(expected analytic|mesh|ciphertext|pim)")
+    from repro.pim.arch import PRESETS
+    raise ValueError(
+        f"unknown backend {name!r}: valid backends are "
+        f"{', '.join(repr(n) for n in BACKEND_NAMES)}; the 'pim' "
+        f"backend additionally takes a hardware preset out of "
+        f"{', '.join(repr(p) for p in sorted(PRESETS))} "
+        f"(serve_fhe --pim-preset / repro.pim.arch.get_arch)")
 
 
 class PipelinedExecutor:
@@ -303,6 +350,9 @@ class PipelinedExecutor:
 
     # -- request path --------------------------------------------------------
 
+    def next_request_id(self) -> int:
+        return self.queue.next_request_id()
+
     def submit(self, tenant: str, workload: str, now: float,
                slots_needed: int = 1, deadline_s: Optional[float] = None,
                payload=None) -> Request:
@@ -360,14 +410,8 @@ class PipelinedExecutor:
             workload=batch.workload)
         done = now + service_s
         for r in batch.requests:
-            r.completion_s = done
-            if r.deadline_s is not None and done > r.deadline_s:
-                r.status = RequestStatus.DEADLINE_MISS
-                self.metrics.incr("deadline_misses")
-                continue
-            r.status = RequestStatus.COMPLETED
-            self.metrics.request_latency.observe(r.latency())
-            self.metrics.incr("requests_completed")
+            record_request_completion(self.metrics, r, done,
+                                      service_start_s=now)
         self.metrics.batch_service.observe(service_s)
         return service_s
 

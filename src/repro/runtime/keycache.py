@@ -107,6 +107,14 @@ class KeyCache:
         self.metrics.incr("keycache_invalidations")
         return True
 
+    def has_prefix(self, prefix: Tuple) -> bool:
+        """Any resident entry whose tuple-key starts with ``prefix``?
+        (The fleet router's cache-affinity warmth probe — e.g.
+        ``has_prefix((workload,))`` asks whether any of a workload's
+        stage constants survived eviction.)"""
+        return any(isinstance(k, tuple) and k[:len(prefix)] == prefix
+                   for k in self._entries)
+
     def invalidate_prefix(self, prefix: Tuple) -> int:
         """Drop every entry whose tuple-key starts with ``prefix``
         (e.g. all stages of one workload). Returns count dropped."""

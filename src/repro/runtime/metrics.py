@@ -91,14 +91,32 @@ class PartitionOccupancy:
 
 
 class MetricsRegistry:
-    """One object threaded through queue/batcher/keycache/executor."""
+    """One object threaded through queue/batcher/keycache/executor —
+    and, under a fleet (repro.fleet), shared by every device so the
+    registry is the single fleet-wide scoreboard: per-device busy
+    seconds, routing hit rate, preemption counts, and the
+    queue-delay vs service-time latency decomposition all land here
+    next to the single-executor metrics."""
 
     def __init__(self, n_partitions: int = 1):
         self.request_latency = LatencyStats("request_latency")
         self.queue_wait = LatencyStats("queue_wait")
+        # latency decomposition: request_latency = queue_delay (arrival
+        # -> service start, the batcher/scheduler's share) + service
+        # time (service start -> completion, the backend's share), so
+        # p99 growth under load is attributable to queueing vs compute
+        self.queue_delay = LatencyStats("queue_delay")
+        self.service_time = LatencyStats("service_time")
         self.batch_service = LatencyStats("batch_service")
         self.occupancy = PartitionOccupancy(n_partitions)
         self.counters: Dict[str, int] = {}
+        # per-tenant counters (deadline_misses, requests_completed):
+        # goodput accounting needs every miss attributed to a tenant,
+        # including drops at dequeue (queue._drop_expired)
+        self.tenant_counters: Dict[str, Dict[str, int]] = {}
+        # fleet: busy seconds per device id (device-level occupancy,
+        # as PartitionOccupancy is bank-level within one device)
+        self.device_busy_s: Dict[int, float] = {}
         # decrypt-side accuracy per workload (ciphertext backend):
         # max |decoded - reference| over every slot of every batch served
         self.decrypt_error: Dict[str, float] = {}
@@ -115,6 +133,24 @@ class MetricsRegistry:
     def count(self, name: str) -> int:
         return self.counters.get(name, 0)
 
+    def incr_tenant(self, name: str, tenant: str, by: int = 1) -> None:
+        d = self.tenant_counters.setdefault(tenant, {})
+        d[name] = d.get(name, 0) + by
+
+    def tenant_count(self, name: str, tenant: str) -> int:
+        return self.tenant_counters.get(tenant, {}).get(name, 0)
+
+    def add_device_busy(self, device_id: int, seconds: float) -> None:
+        self.device_busy_s[device_id] = \
+            self.device_busy_s.get(device_id, 0.0) + seconds
+
+    def device_occupancy(self) -> Dict[int, float]:
+        """Busy fraction per fleet device over the serve window."""
+        if self.elapsed_s <= 0:
+            return {d: 0.0 for d in self.device_busy_s}
+        return {d: min(1.0, b / self.elapsed_s)
+                for d, b in sorted(self.device_busy_s.items())}
+
     def hit_rate(self, prefix: str) -> float:
         """hits / (hits + misses) for counters ``{prefix}_hits`` and
         ``{prefix}_misses``."""
@@ -125,19 +161,33 @@ class MetricsRegistry:
         done = self.count("requests_completed")
         return done / self.elapsed_s if self.elapsed_s > 0 else 0.0
 
+    def goodput_rps(self) -> float:
+        """Deadline-met throughput: completions of deadline-bearing
+        requests per second (a best-effort completion doesn't count —
+        goodput measures SLO-attaining work, the fig20 y-axis)."""
+        done = self.count("requests_goodput")
+        return done / self.elapsed_s if self.elapsed_s > 0 else 0.0
+
     def summary(self) -> Dict[str, object]:
         return {
             "elapsed_s": self.elapsed_s,
             "throughput_rps": self.throughput_rps(),
+            "goodput_rps": self.goodput_rps(),
             "latency": self.request_latency.summary(),
             "queue_wait": self.queue_wait.summary(),
+            "queue_delay": self.queue_delay.summary(),
+            "service_time": self.service_time.summary(),
             "batch_service": self.batch_service.summary(),
             "keycache_hit_rate": self.hit_rate("keycache"),
             "compile_cache_hit_rate": self.hit_rate("compile"),
+            "routing_hit_rate": self.hit_rate("routing"),
             "mean_partition_occupancy":
                 self.occupancy.mean_occupancy(self.elapsed_s),
+            "device_occupancy": self.device_occupancy(),
             "decrypt_error": dict(sorted(self.decrypt_error.items())),
             "counters": dict(sorted(self.counters.items())),
+            "tenants": {t: dict(sorted(c.items())) for t, c in
+                        sorted(self.tenant_counters.items())},
         }
 
     def format_table(self) -> str:
@@ -149,12 +199,27 @@ class MetricsRegistry:
             f"latency p50/p95/p99   {lat['p50_s']*1e3:.2f} / "
             f"{lat['p95_s']*1e3:.2f} / {lat['p99_s']*1e3:.2f} ms",
             f"queue wait p50        {self.queue_wait.p50*1e3:.2f} ms",
+            f"queue delay p99       {self.queue_delay.p99*1e3:.2f} ms",
+            f"service time p99      {self.service_time.p99*1e3:.2f} ms",
             f"keycache hit rate     {s['keycache_hit_rate']*100:.1f} %",
             f"compile hit rate      {s['compile_cache_hit_rate']*100:.1f} %",
             f"partition occupancy   {s['mean_partition_occupancy']*100:.1f} %",
         ]
+        if self.count("requests_goodput"):
+            lines.insert(2, f"goodput               "
+                            f"{s['goodput_rps']:.1f} req/s")
+        occ = s["device_occupancy"]
+        if occ:
+            lines.append("device occupancy      " + " ".join(
+                f"d{d}={f*100:.0f}%" for d, f in occ.items()))
+            lines.append(f"routing hit rate      "
+                         f"{s['routing_hit_rate']*100:.1f} %")
         for w, e in s["decrypt_error"].items():
             lines.append(f"max |err| {w:<11} {e:.3e}")
         for k, v in s["counters"].items():
             lines.append(f"{k:<21} {v}")
+        for t, c in s["tenants"].items():
+            miss = c.get("deadline_misses", 0)
+            if miss:
+                lines.append(f"deadline misses {t:<6} {miss}")
         return "\n".join(lines)

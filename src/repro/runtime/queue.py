@@ -42,6 +42,9 @@ class Request:
     payload: object = None           # opaque ciphertext (mesh backend) or None
     status: RequestStatus = RequestStatus.QUEUED
     completion_s: Optional[float] = None
+    service_start_s: Optional[float] = None   # backend execution began
+    #                                           (latency = queue delay up
+    #                                           to here + service after)
 
     def latency(self) -> float:
         assert self.completion_s is not None
@@ -86,7 +89,9 @@ class AdmissionQueue:
     def _drop_expired(self, q: Deque[Request], now: float) -> None:
         """Purge expired requests anywhere in the queue (not just the
         front) so demand accounting and take() never see — let alone
-        batch — work nobody is waiting for."""
+        batch — work nobody is waiting for. Every drop is attributed to
+        its tenant (goodput accounting needs the miss charged somewhere,
+        not silently discarded)."""
         if not any(r.expired(now) for r in q):
             return
         live = []
@@ -94,6 +99,8 @@ class AdmissionQueue:
             if r.expired(now):
                 r.status = RequestStatus.DEADLINE_MISS
                 self.metrics.incr("deadline_misses")
+                self.metrics.incr("deadline_misses_dequeue")
+                self.metrics.incr_tenant("deadline_misses", r.tenant)
             else:
                 live.append(r)
         q.clear()

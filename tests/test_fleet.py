@@ -1,0 +1,436 @@
+"""repro.fleet: the N=1 fleet must reproduce the single
+PipelinedExecutor bit for bit; router policies place correctly;
+continuous batching refills in-flight batches without mixing
+workloads; preemption evicts best-effort flights at round boundaries
+(never at the last step) without losing or duplicating requests; and
+the metrics layer decomposes latency and attributes per-tenant drops."""
+import itertools
+import random
+
+import pytest
+
+from repro.core.params import test_params as _test_params
+from repro.core.pipeline import MemoryModel
+from repro.fleet import POLICIES, FleetScheduler, Router
+from repro.fleet.device import Flight
+from repro.runtime import (BatchPolicy, KeyCache, PipelinedExecutor,
+                           Request, RequestStatus)
+from repro.runtime.executor import resolve_backend
+from repro.runtime.queue import AdmissionQueue
+
+PARAMS = _test_params(log_n=10, n_levels=8, dnum=2)
+MEM = MemoryModel(n_partitions=4, partition_bytes=8 * 2 ** 20)
+# tiny partitions force the mapper to split programs into many stages
+# spanning several pipeline rounds — the regime the continuous-batching
+# and preemption round-boundary machinery exists for
+MEM_MULTI_ROUND = MemoryModel(n_partitions=2, partition_bytes=640 * 1024)
+
+
+def _prog_a(x, w, consts=None):
+    s = x * w
+    for k in (1, 2, 4):
+        s = s + s.rotate(k)
+    return s * consts["c1"] + x
+
+
+def _prog_b(x, consts=None):
+    h = x * consts["w1"]
+    h = h + h.rotate(1)
+    return h * h
+
+
+def _prog_mv(x, consts=None):
+    # rotation-heavy diagonal matvec: each rotate carries an evk and
+    # each diagonal a plaintext constant, so under MEM_MULTI_ROUND's
+    # small partitions the mapper splits it across many rounds
+    acc = x * consts["d0"]
+    for i in range(1, 6):
+        acc = acc + x.rotate(i) * consts[f"d{i}"]
+    return acc
+
+
+MV_CONSTS = tuple(f"d{i}" for i in range(6))
+
+
+def _policy(max_batch=4, max_wait_s=2e-3):
+    return BatchPolicy(slots_per_ct=PARAMS.slots, max_batch=max_batch,
+                       max_wait_s=max_wait_s)
+
+
+def _register(target):
+    target.register("a", _prog_a, 2, const_names=("c1",), start_level=7)
+    target.register("b", _prog_b, 1, const_names=("w1",), start_level=7)
+    target.register("mv", _prog_mv, 1, const_names=MV_CONSTS,
+                    start_level=7)
+    return target
+
+
+def _round_times(fleet, workload, occupancy=1):
+    """Per-round service seconds of one device's schedule at a fixed
+    batch occupancy (for placing arrivals inside specific rounds)."""
+    from repro.runtime.metrics import MetricsRegistry
+    dev = fleet.devices[0]
+    sched = dev.schedule_for(workload, fleet.workloads[workload].trace)
+    scratch = MetricsRegistry(dev.mem.n_partitions)
+    return [dev.backend.round_seconds(sched, rnd, occupancy,
+                                      key_cache=None, metrics=scratch,
+                                      workload=workload)
+            for rnd in sched.rounds]
+
+
+def _fleet(n_devices=1, router="round_robin", cache_bytes=0,
+           continuous_batching=False, preempt=False, policy=None,
+           backend="analytic", mem=MEM):
+    return _register(FleetScheduler(
+        PARAMS, mem, n_devices=n_devices, backend=backend, router=router,
+        policy=policy or _policy(), cache_bytes=cache_bytes,
+        continuous_batching=continuous_batching, preempt=preempt))
+
+
+def _stream(n=90, rate=400.0, seed=3, deadline=None, slots=(1, 2, 4),
+            workloads=("a", "b"), tenants=3, best_effort_every=0):
+    """Deterministic mixed-workload Poisson-ish arrival list."""
+    rng = random.Random(seed)
+    ids = itertools.count()
+    out, t = [], 0.0
+    for i in range(n):
+        t += rng.expovariate(rate)
+        dl = None
+        if deadline is not None and not (
+                best_effort_every and i % best_effort_every == 0):
+            dl = t + deadline
+        out.append(Request(next(ids), tenant=f"t{i % tenants}",
+                           workload=workloads[i % len(workloads)],
+                           arrival_s=t,
+                           slots_needed=rng.choice(list(slots)),
+                           deadline_s=dl))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fleet(N=1) == PipelinedExecutor, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_fleet_of_one_reproduces_single_executor_exactly():
+    """The acceptance anchor: plain fleet(N=1, round_robin, no
+    continuous batching, no preemption) must reproduce the single
+    executor's latency/throughput on a mixed stream — not within a
+    tolerance, identically (same floats, same counters)."""
+    policy = _policy()
+    kc = KeyCache(32 * 2 ** 20, load_bw=MEM.load_bw)
+    ex = _register(PipelinedExecutor(PARAMS, MEM, backend="analytic",
+                                     policy=policy, key_cache=kc))
+    m1 = ex.serve(_stream(deadline=0.05))
+
+    fleet = _fleet(n_devices=1, cache_bytes=32 * 2 ** 20, policy=_policy())
+    m2 = fleet.serve(_stream(deadline=0.05))
+
+    assert m1.elapsed_s == m2.elapsed_s
+    assert m1.throughput_rps() == m2.throughput_rps()
+    for p in (50, 95, 99):
+        assert m1.request_latency.percentile(p) == \
+            m2.request_latency.percentile(p)
+    for c in ("requests_completed", "requests_served", "batches_formed",
+              "deadline_misses", "keycache_hits", "keycache_misses"):
+        assert m1.count(c) == m2.count(c), c
+
+
+def test_fleet_of_one_pim_backend_matches_executor():
+    policy = _policy()
+    ex = _register(PipelinedExecutor(PARAMS, MEM, backend="pim",
+                                     policy=policy))
+    m1 = ex.serve(_stream(n=40))
+    fleet = _fleet(n_devices=1, backend="pim", policy=_policy())
+    m2 = fleet.serve(_stream(n=40))
+    assert m1.elapsed_s == m2.elapsed_s
+    assert m1.request_latency.p99 == m2.request_latency.p99
+    assert m1.count("requests_completed") == m2.count("requests_completed")
+
+
+# ---------------------------------------------------------------------------
+# router policies
+# ---------------------------------------------------------------------------
+
+def test_router_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="round_robin"):
+        _fleet(n_devices=2, router="sticky")
+
+
+def test_round_robin_cycles_devices():
+    fleet = _fleet(n_devices=3)
+    seen = [fleet.router.route(
+        Request(i, "t0", "a", arrival_s=0.0), 0.0).device_id
+        for i in range(6)]
+    assert seen == [0, 1, 2, 0, 1, 2]
+
+
+def test_least_loaded_prefers_emptier_device():
+    fleet = _fleet(n_devices=2, router="least_loaded")
+    heavy = fleet.devices[0]
+    for i in range(4):
+        heavy.admit(Request(100 + i, "t0", "a", arrival_s=0.0,
+                            slots_needed=4))
+    dev = fleet.router.route(Request(0, "t0", "a", arrival_s=0.0), 0.0)
+    assert dev.device_id == 1
+
+
+def test_cache_affinity_sticks_and_records_hits():
+    fleet = _fleet(n_devices=4, router="cache_affinity",
+                   cache_bytes=32 * 2 ** 20)
+    m = fleet.serve(_stream(n=80))
+    assert m.count("requests_completed") == 80
+    # after the first (cold) placement per workload, every request of
+    # that workload lands on a warm device
+    hits = m.count("routing_hits")
+    misses = m.count("routing_misses")
+    assert hits + misses == 80
+    assert misses <= 4          # at most one cold miss per workload + slack
+    # placement is sticky: each workload's requests went to one device
+    assert m.hit_rate("routing") > 0.9
+
+
+def test_cache_affinity_spills_when_warm_device_backlogged():
+    fleet = _fleet(n_devices=2, router="cache_affinity",
+                   cache_bytes=32 * 2 ** 20)
+    warm = fleet.devices[0]
+    warm.key_cache.get_or_load(("a", "stage", 0), 1024)   # mark warm
+    # pile more than a full batch of slots onto the warm device
+    for i in range(3000, 3000 + 2 * fleet.policy.max_batch):
+        warm.admit(Request(i, "t0", "a", arrival_s=0.0,
+                           slots_needed=fleet.policy.slots_per_ct))
+    dev = fleet.router.route(Request(0, "t1", "a", arrival_s=0.0), 0.0)
+    assert dev.device_id == 1
+
+
+def test_fleet_routers_all_drain_stream():
+    for policy in POLICIES:
+        fleet = _fleet(n_devices=3, router=policy,
+                       cache_bytes=16 * 2 ** 20)
+        m = fleet.serve(_stream(n=60))
+        assert m.count("requests_completed") == 60, policy
+
+
+# ---------------------------------------------------------------------------
+# fleet scaling
+# ---------------------------------------------------------------------------
+
+def test_four_devices_beat_one_on_goodput_under_overload():
+    """The fig20 scaling gate in miniature: at an offered load that
+    saturates one device, four devices complete far more requests
+    within their deadlines."""
+    probe = _fleet(n_devices=1, cache_bytes=32 * 2 ** 20,
+                   continuous_batching=True)
+    probe.warmup()
+    pm = probe.serve(_stream(n=400, rate=1e9, seed=11))
+    cap1 = pm.count("requests_completed") / pm.device_busy_s[0]
+    deadline = 2 * probe.policy.max_wait_s + 4 * pm.batch_service.mean
+
+    def run(n_dev):
+        fleet = _fleet(n_devices=n_dev, router="least_loaded",
+                       cache_bytes=32 * 2 ** 20,
+                       continuous_batching=True)
+        fleet.warmup()
+        m = fleet.serve(_stream(n=2400, rate=4.0 * cap1, seed=11,
+                                deadline=deadline))
+        return m.goodput_rps()
+
+    g1, g4 = run(1), run(4)
+    assert g4 >= 2.5 * g1, (g1, g4)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+def test_continuous_refill_joins_in_flight_batch():
+    """Requests of the same workload that arrive while a batch is
+    streaming join its free slot rows at a round boundary instead of
+    waiting for the next batch to form."""
+    fleet = _fleet(n_devices=1, continuous_batching=True,
+                   policy=_policy(max_batch=8, max_wait_s=1e-4),
+                   mem=MEM_MULTI_ROUND)
+    ids = itertools.count()
+    dts = _round_times(fleet, "mv")
+    assert len(dts) >= 2, "need a multi-round schedule to refill into"
+    # lead batch fires alone at max_wait; stragglers arrive inside its
+    # first round-step and join at the first round boundary
+    lead = [Request(next(ids), "t0", "mv", arrival_s=0.0)
+            for _ in range(2)]
+    t_mid_round1 = 1e-4 + 0.5 * dts[0]
+    late = [Request(next(ids), "t0", "mv", arrival_s=t_mid_round1)
+            for _ in range(3)]
+    m = fleet.serve(lead + late)
+    assert m.count("requests_completed") == 5
+    assert m.count("continuous_refills") >= 1
+    assert m.count("requests_refilled") == 3
+    # joiners didn't wait for a second batch to form
+    assert m.count("batches_formed") == 1
+
+
+def test_continuous_refill_never_mixes_workloads():
+    fleet = _fleet(n_devices=1, continuous_batching=True,
+                   policy=_policy(max_batch=8, max_wait_s=1e-4),
+                   mem=MEM_MULTI_ROUND)
+    ids = itertools.count()
+    dts = _round_times(fleet, "mv")
+    lead = [Request(next(ids), "t0", "mv", arrival_s=0.0)]
+    late_other = [Request(next(ids), "t0", "b",
+                          arrival_s=1e-4 + 0.5 * dts[0])
+                  for _ in range(3)]
+    m = fleet.serve(lead + late_other)
+    # workload b requests were NOT refilled into workload a's flight —
+    # they formed their own batch(es)
+    assert m.count("requests_refilled") == 0
+    assert m.count("requests_completed") == 4
+    assert m.count("batches_formed") >= 2
+
+
+def test_flight_occupancy_and_membership_accounting():
+    from repro.runtime.batcher import Batch
+    reqs = [Request(i, "t0", "a", arrival_s=0.0, slots_needed=1)
+            for i in range(3)]
+    batch = Batch("a", reqs, [[reqs[0], reqs[1]], [reqs[2]]], 0.0)
+
+    class _Sched:
+        rounds = [(), ()]
+    f = Flight(batch, _Sched(), slots_per_ct=4, now=0.0)
+    assert f.occupancy == 2
+    assert f.min_rounds_left() == 2
+    assert f.best_effort()
+    joiner = Request(9, "t1", "a", arrival_s=0.1, slots_needed=1,
+                     deadline_s=5.0)
+    f.groups[0].append(joiner)
+    f.absorb([joiner], 0.1)
+    assert f.rounds_left[9] == 2
+    assert not f.best_effort()
+
+
+# ---------------------------------------------------------------------------
+# preemption
+# ---------------------------------------------------------------------------
+
+def _preempt_fleet():
+    # max_wait far below a round time, so a deadline batch is "ready"
+    # at the first boundary after it arrives
+    return _fleet(n_devices=1, preempt=True, continuous_batching=False,
+                  policy=_policy(max_batch=8, max_wait_s=1e-6),
+                  mem=MEM_MULTI_ROUND)
+
+
+def test_preemption_evicts_best_effort_for_deadline_batch():
+    fleet = _preempt_fleet()
+    ids = itertools.count()
+    dts = _round_times(fleet, "mv")
+    assert len(dts) >= 3, "need rounds for a mid-flight preempt"
+    best_effort = [Request(next(ids), "t0", "mv", arrival_s=0.0)
+                   for _ in range(2)]
+    # urgent batch arrives inside the best-effort flight's second
+    # round-step: its max-wait clock (1e-6) expires well before the
+    # boundary, so the boundary check finds it ready to fire
+    t_fire = 1e-6                      # lead batch forms at max_wait
+    t_urgent = t_fire + dts[0] + 0.2 * dts[1]
+    urgent = [Request(next(ids), "t1", "b", arrival_s=t_urgent,
+                      deadline_s=t_urgent + 0.05) for _ in range(2)]
+    m = fleet.serve(best_effort + urgent)
+    assert m.count("preemptions") == 1
+    assert m.count("requests_preempted") == 2
+    # nothing lost, nothing duplicated: every request completes once
+    assert m.count("requests_completed") == 4
+    assert m.count("requests_served") == 4
+    for r in best_effort + urgent:
+        assert r.status is RequestStatus.COMPLETED
+
+
+def test_preemption_skipped_on_last_round():
+    """A flight with exactly one round-step left finishes instead of
+    being evicted — completing is strictly cheaper than redoing the
+    whole pipeline."""
+    fleet = _preempt_fleet()
+    ids = itertools.count()
+    dts = _round_times(fleet, "mv")
+    best_effort = [Request(next(ids), "t0", "mv", arrival_s=0.0)]
+    # urgent work arrives inside the PENULTIMATE round-step: the first
+    # boundary that sees it ready is the one where the flight has
+    # exactly one round left
+    t_fire = 1e-6
+    t_urgent = t_fire + sum(dts[:-2]) + 0.5 * dts[-2]
+    urgent = [Request(next(ids), "t1", "b", arrival_s=t_urgent,
+                      deadline_s=t_urgent + 0.05)]
+    m = fleet.serve(best_effort + urgent)
+    assert m.count("preemptions") == 0
+    assert m.count("requests_completed") == 2
+    assert best_effort[0].status is RequestStatus.COMPLETED
+
+
+def test_deadline_flight_never_preempted():
+    fleet = _preempt_fleet()
+    ids = itertools.count()
+    dts = _round_times(fleet, "mv")
+    # the in-flight batch itself carries a deadline -> not best-effort,
+    # even with an urgent batch ready at an early boundary
+    lead = [Request(next(ids), "t0", "mv", arrival_s=0.0,
+                    deadline_s=0.05)]
+    t_urgent = 1e-6 + dts[0] + 0.2 * dts[1]
+    urgent = [Request(next(ids), "t1", "b", arrival_s=t_urgent,
+                      deadline_s=t_urgent + 0.02)]
+    m = fleet.serve(lead + urgent)
+    assert m.count("preemptions") == 0
+    assert m.count("requests_completed") == 2
+
+
+# ---------------------------------------------------------------------------
+# metrics: latency decomposition + per-tenant attribution
+# ---------------------------------------------------------------------------
+
+def test_latency_decomposes_into_queue_delay_plus_service():
+    fleet = _fleet(n_devices=2, router="least_loaded")
+    arrivals = _stream(n=40)
+    m = fleet.serve(arrivals)
+    assert m.queue_delay.count == m.request_latency.count
+    assert m.service_time.count == m.request_latency.count
+    for r in arrivals:
+        assert r.status is RequestStatus.COMPLETED
+        assert r.service_start_s is not None
+        queue_delay = r.service_start_s - r.arrival_s
+        service = r.completion_s - r.service_start_s
+        assert queue_delay >= 0.0 and service >= 0.0
+        assert queue_delay + service == pytest.approx(r.latency())
+    # aggregate means must add up too
+    assert m.queue_delay.mean + m.service_time.mean == \
+        pytest.approx(m.request_latency.mean)
+
+
+def test_dequeue_deadline_drops_attributed_per_tenant():
+    q = AdmissionQueue()
+    q.submit(Request(0, "acme", "a", arrival_s=0.0, deadline_s=1.0))
+    q.submit(Request(1, "acme", "a", arrival_s=0.0, deadline_s=1.0))
+    q.submit(Request(2, "globex", "a", arrival_s=0.0, deadline_s=1.0))
+    q.submit(Request(3, "globex", "a", arrival_s=0.0, deadline_s=99.0))
+    assert len(q.take(now=5.0, workload="a", max_requests=8)) == 1
+    assert q.metrics.count("deadline_misses") == 3
+    assert q.metrics.count("deadline_misses_dequeue") == 3
+    assert q.metrics.tenant_count("deadline_misses", "acme") == 2
+    assert q.metrics.tenant_count("deadline_misses", "globex") == 1
+
+
+def test_device_occupancy_recorded_per_device():
+    fleet = _fleet(n_devices=2, router="round_robin")
+    m = fleet.serve(_stream(n=40))
+    occ = m.device_occupancy()
+    assert set(occ) == {0, 1}
+    assert all(0.0 < v <= 1.0 for v in occ.values())
+
+
+# ---------------------------------------------------------------------------
+# resolve_backend error message
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend_error_enumerates_backends_and_presets():
+    with pytest.raises(ValueError) as ei:
+        resolve_backend("cuda", PARAMS, MEM)
+    msg = str(ei.value)
+    for name in ("analytic", "mesh", "ciphertext", "pim"):
+        assert f"'{name}'" in msg
+    for preset in ("flat", "fhemem", "hbm2"):
+        assert f"'{preset}'" in msg
+    assert "--pim-preset" in msg
