@@ -85,6 +85,7 @@ def main(argv=()) -> None:
     for wname, (fn, n_in, consts) in _workloads(args.smoke).items():
         trace = trace_program(fn, n_in, const_names=consts)
         base_s = None
+        report = None
         enabled = ["bootstrap"]
         for stage in _STAGES:
             if stage != "unopt":
@@ -102,15 +103,24 @@ def main(argv=()) -> None:
             n_rot = sum(1 for o in opt.ops if o.kind == "rotate")
             n_boot = sum(1 for o in opt.ops if o.kind == "bootstrap")
             derived = (f"{len(opt.ops)}ops {n_rot}rot "
-                       f"{n_boot}boot speedup={base_s / lat:.2f}x")
+                       f"{n_boot}boot speedup={base_s / lat:.2f}x "
+                       f"compile={report.wall_s * 1e3:.1f}ms")
             row(f"fig17_{wname}_{stage}", lat * 1e6, derived)
             records.append({
                 "workload": wname, "stage": stage,
                 "latency_s": lat, "n_ops": len(opt.ops),
                 "n_rotations": n_rot, "n_bootstraps": n_boot,
                 "speedup_vs_unopt": base_s / lat,
+                "compile_wall_s": report.wall_s,
                 "smoke": bool(args.smoke),
             })
+        # per-pass wall/op-delta detail for the full pipeline (the
+        # same PassReport the compile cache attaches to schedules and
+        # the compile span surfaces per pass); '#'-prefixed so the
+        # CSV-row contract of run.py stays parseable
+        if report is not None:
+            for ln in report.format_table(include_wall=True).splitlines():
+                print(f"# {ln}")
     with open(out_path, "w") as f:
         for r in records:
             f.write(json.dumps(r) + "\n")

@@ -85,7 +85,11 @@ def _build_fleet(params, mem, start_level, *, n_devices, router,
         params, mem, n_devices=n_devices, backend="analytic",
         router=router, policy=policy, cache_bytes=cache_bytes,
         pass_config=PassConfig(start_level=start_level, bsgs_min_terms=4),
-        continuous_batching=continuous)
+        continuous_batching=continuous,
+        # bounded percentile memory: sweeps run O(10k) requests per
+        # point; 4096 exact-below/reservoir-above samples keeps p99
+        # honest while capping the accumulators (satellite of fig21)
+        latency_reservoir=4096)
     for name, (fn, n_in, consts) in _workloads(smoke).items():
         fleet.register(name, fn, n_in, const_names=consts,
                        start_level=start_level)

@@ -74,13 +74,15 @@ def fig17_table():
     print("\n### Fig. 17 — compiler ablation (cumulative passes, "
           "analytic latency)\n")
     print("| workload | stage | ops | rotations | bootstraps | "
-          "latency_ms | speedup vs unopt |")
-    print("|---|---|---|---|---|---|---|")
+          "latency_ms | speedup vs unopt | compile_ms |")
+    print("|---|---|---|---|---|---|---|---|")
     for r in recs:
+        wall = (f"{r['compile_wall_s'] * 1e3:.1f}"
+                if "compile_wall_s" in r else "—")
         print(f"| {r['workload']} | {r['stage']} | {r['n_ops']} | "
               f"{r['n_rotations']} | {r['n_bootstraps']} | "
               f"{r['latency_s'] * 1e3:.3f} | "
-              f"{r['speedup_vs_unopt']:.2f}x |")
+              f"{r['speedup_vs_unopt']:.2f}x | {wall} |")
     # last record per workload = the full cumulative pipeline
     full = list({r["workload"]: r for r in recs}.values())
     if full:
@@ -175,6 +177,46 @@ def fig20_table():
               f"{pts[4] / pts[1]:.2f}x from 1 -> 4 devices.")
 
 
+def fig21_table():
+    path = os.path.join(RESULTS, "fig21_trace.jsonl")
+    if not os.path.exists(path):
+        return
+    recs = [json.loads(line) for line in open(path)]
+    over = [r for r in recs if r["figure"] == "overhead"]
+    print("\n### Fig. 21 — request tracing (overhead gates + critical-path "
+          "breakdown from span trees)\n")
+    if over:
+        r = over[-1]
+        print(f"Tracing overhead: encrypted serve "
+              f"{r['overhead_frac'] * 100:+.1f}% wall "
+              f"(budget {r['budget_frac'] * 100:.0f}%), reported "
+              f"throughput delta 0% (bit-for-bit), simulator harness "
+              f"{r['sim_overhead_frac'] * 100:+.1f}% "
+              f"({r['n_spans']} spans / {r['n_requests']} requests).\n")
+    bd = [r for r in recs if r["figure"] == "breakdown"]
+    if bd:
+        print("| workload | n | mean latency_us | queue | const load | "
+              "compute | on-chip move | other |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in bd:
+            lat = r["latency_s"] or 1e-30
+            print(f"| {r['workload']} | {r['n']} | "
+                  f"{r['latency_s'] * 1e6:.1f} | "
+                  f"{r['queue_s'] / lat * 100:.0f}% | "
+                  f"{r['load_s'] / lat * 100:.0f}% | "
+                  f"{r['compute_s'] / lat * 100:.0f}% | "
+                  f"{r['move_s'] / lat * 100:.0f}% | "
+                  f"{r['other_s'] / lat * 100:.0f}% |")
+    isa = [r for r in recs if r["figure"] == "pim_isa"]
+    if isa:
+        cy = isa[-1]["class_cycles"]
+        total = sum(cy.values()) or 1.0
+        parts = " ".join(f"{k}={v / total * 100:.0f}%"
+                         for k, v in cy.items())
+        print(f"\nPIM execute spans attribute to instruction classes: "
+              f"{parts} (of {total:.0f} bank-cycles).")
+
+
 def pick_hillclimb():
     recs = [r for r in load("roofline.jsonl") if r["status"] == "ok"]
     by_rf = sorted((r for r in recs if r["shape"] != "long_500k"),
@@ -205,5 +247,7 @@ if __name__ == "__main__":
         fig19_table()
     if what in ("all", "fig20"):
         fig20_table()
+    if what in ("all", "fig21"):
+        fig21_table()
     if what in ("all", "pick"):
         pick_hillclimb()

@@ -23,6 +23,7 @@ guarantees are enforced per pass:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Tuple
 
 from repro.core.params import CkksParams
@@ -104,6 +105,12 @@ class PassStats:
     seconds_after: Optional[float]
     applied: bool
     reverted: bool = False
+    wall_s: float = 0.0               # compile-time cost of the pass
+                                      # itself (run + cost re-check)
+
+    @property
+    def delta_ops(self) -> int:
+        return self.n_ops_after - self.n_ops_before
 
     @property
     def speedup(self) -> Optional[float]:
@@ -126,19 +133,36 @@ class CompileReport:
             return None
         return self.seconds_unopt / self.seconds_opt
 
-    def format_table(self) -> str:
-        rows = [f"{'pass':<14}{'ops':>10}{'analytic_s':>14}{'Δ':>9}"]
+    @property
+    def wall_s(self) -> float:
+        """Total compile wall time across the pass pipeline."""
+        return sum(s.wall_s for s in self.passes)
+
+    def format_table(self, include_wall: bool = False) -> str:
+        hdr = f"{'pass':<14}{'ops':>10}{'analytic_s':>14}{'Δ':>9}"
+        rows = [hdr + (f"{'wall_ms':>10}" if include_wall else "")]
         for s in self.passes:
             sec = "-" if s.seconds_after is None else f"{s.seconds_after:.3e}"
             dlt = ("reverted" if s.reverted
                    else "-" if s.speedup is None
                    else f"{s.speedup:.2f}x")
-            rows.append(f"{s.name:<14}{s.n_ops_before:>5}->{s.n_ops_after:<4}"
-                        f"{sec:>13}{dlt:>9}")
+            row = (f"{s.name:<14}{s.n_ops_before:>5}->{s.n_ops_after:<4}"
+                   f"{sec:>13}{dlt:>9}")
+            if include_wall:
+                row += f"{s.wall_s*1e3:>10.2f}"
+            rows.append(row)
         total = "-" if self.speedup is None else f"{self.speedup:.2f}x"
-        rows.append(f"{'total':<14}{self.n_ops_unopt:>5}->"
-                    f"{self.n_ops_opt:<4}{self.seconds_opt:>13.3e}{total:>9}")
+        last = (f"{'total':<14}{self.n_ops_unopt:>5}->"
+                f"{self.n_ops_opt:<4}{self.seconds_opt:>13.3e}{total:>9}")
+        if include_wall:
+            last += f"{self.wall_s*1e3:>10.2f}"
+        rows.append(last)
         return "\n".join(rows)
+
+
+# the name the runtime uses when the report rides a compiled schedule
+# (PipelineSchedule.pass_report) and compile spans
+PassReport = CompileReport
 
 
 def _try_seconds(trace, params, start, boot_to):
@@ -168,8 +192,10 @@ def optimize_trace(trace: FheTrace, params: CkksParams,
     stats: List[PassStats] = []
     for p in config.enabled():
         before_ops = len(work.ops)
+        t0 = time.perf_counter()
         new = p.run(work, params, config)
         sec_new = _try_seconds(new, params, start, config.bootstrap_to)
+        wall = time.perf_counter() - t0
         applied, reverted = True, False
         if not p.may_increase_cost and sec is not None and (
                 sec_new is None or sec_new > sec * (1 + 1e-12)):
@@ -180,7 +206,8 @@ def optimize_trace(trace: FheTrace, params: CkksParams,
             assert sec_new <= sec * (1 + 1e-9), \
                 f"pass {p.name} increased analytic cost {sec} -> {sec_new}"
         stats.append(PassStats(p.name, before_ops, len(new.ops),
-                               sec, sec_new, applied, reverted))
+                               sec, sec_new, applied, reverted,
+                               wall_s=wall))
         work, sec = new, sec_new
     if sec is None:
         # still infeasible: surface the structured error to the caller

@@ -85,6 +85,12 @@ class PipelineSchedule:
     #                                   shared with the stages), so real
     #                                   executors can encrypt inputs and
     #                                   decode outputs (engine.run_schedule)
+    pass_report: object = dataclasses.field(
+        default=None, repr=False, compare=False)
+    #   repro.compiler.PassReport from the optimizing compile that
+    #   produced `trace` (None when serving verbatim) — attached by
+    #   CompileCache so compile spans and fig17 can surface per-pass
+    #   wall time without recompiling
 
     # -- latency model -------------------------------------------------------
 

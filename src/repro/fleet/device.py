@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Set
 from repro.core.params import CkksParams
 from repro.core.pipeline import (MemoryModel, PipelineSchedule,
                                  generate_load_save_pipeline)
+from repro.obs.tracer import ExecObs
 from repro.runtime.batcher import Batch, BatchPolicy, SlotBatcher
 from repro.runtime.compile_cache import CompileCache
 from repro.runtime.executor import record_request_completion
@@ -63,6 +64,9 @@ class Flight:
         self.cursor = 0            # next round index to execute
         self.step_dt = 0.0         # duration of the step in service
         self.total_service = 0.0
+        self.span: Optional[int] = None   # open batch span (tracing on)
+        self.obs: Optional[ExecObs] = None
+        self.n_refills = 0
 
     @property
     def occupancy(self) -> int:
@@ -96,7 +100,8 @@ class Flight:
                 del self.rounds_left[rid]
         for r in done:
             record_request_completion(metrics, r, now,
-                                      self.service_start.pop(r.request_id))
+                                      self.service_start.pop(r.request_id),
+                                      batch_span=self.span)
         if done:
             gone = {r.request_id for r in done}
             for i, g in enumerate(self.groups):
@@ -192,15 +197,22 @@ class Device:
         if req.slots_needed > self.policy.slots_per_ct:
             req.status = RequestStatus.REJECTED
             self.metrics.incr("requests_oversized")
+            tr, log = self.metrics.tracer, self.metrics.event_log
+            if tr is not None:
+                tr.close_root(req, req.arrival_s, "rejected",
+                              reason="oversized")
+            if log is not None:
+                log.emit("rejected", req.arrival_s, req, reason="oversized")
         else:
             self.queue.submit(req)
 
     # -- compile -------------------------------------------------------------
 
-    def schedule_for(self, workload: str, trace) -> PipelineSchedule:
+    def schedule_for(self, workload: str, trace,
+                     obs: Optional[ExecObs] = None) -> PipelineSchedule:
         sched = self.compile_cache.get_schedule(
             trace, self.params, self.mem, self.mapper,
-            pass_config=self.pass_config)
+            pass_config=self.pass_config, obs=obs)
         self.compiled.add(workload)
         return sched
 
@@ -240,7 +252,17 @@ class Device:
     def _start_batch(self, batch: Batch, now: float,
                      workloads: Dict[str, object]) -> None:
         trace = workloads[batch.workload].trace
-        sched = self.schedule_for(batch.workload, trace)
+        tr = self.metrics.tracer
+        track = f"device:{self.device_id}"
+        bspan = obs = None
+        if tr is not None:
+            bspan = tr.begin(f"batch:{batch.workload}", now, track=track,
+                             workload=batch.workload,
+                             n_requests=len(batch.requests),
+                             n_ciphertexts=batch.n_ciphertexts,
+                             device=self.device_id)
+            obs = ExecObs(tr, bspan, now, track)
+        sched = self.schedule_for(batch.workload, trace, obs=obs)
         stepped = ((self.continuous_batching or self.preempt)
                    and hasattr(self.backend, "round_seconds")
                    and len(sched.rounds) > 0)
@@ -249,17 +271,22 @@ class Device:
             # the fleet(N=1) regression anchor
             service_s = self.backend.execute(
                 sched, batch, key_cache=self.key_cache,
-                metrics=self.metrics, workload=batch.workload)
+                metrics=self.metrics, workload=batch.workload, obs=obs)
             done = now + service_s
+            if tr is not None:
+                tr.end(bspan, done)
             for r in batch.requests:
                 record_request_completion(self.metrics, r, done,
-                                          service_start_s=now)
+                                          service_start_s=now,
+                                          batch_span=bspan)
             self.metrics.batch_service.observe(service_s)
             self.metrics.add_device_busy(self.device_id, service_s)
             self.busy_until = done
             self._atomic_in_service = True
             return
         self.flight = Flight(batch, sched, self.policy.slots_per_ct, now)
+        self.flight.span = bspan
+        self.flight.obs = obs
         self._begin_step(now)
 
     def _begin_step(self, now: float) -> None:
@@ -267,7 +294,8 @@ class Device:
         dt = self.backend.round_seconds(
             f.schedule, f.schedule.rounds[f.cursor], f.occupancy,
             key_cache=self.key_cache, metrics=self.metrics,
-            workload=f.workload)
+            workload=f.workload,
+            obs=f.obs.at(now) if f.obs is not None else None)
         f.step_dt = dt
         self.metrics.add_device_busy(self.device_id, dt)
         self.busy_until = now + dt
@@ -277,9 +305,12 @@ class Device:
         in order — preempt for a firing deadline batch, refill free
         slot rows, or issue the next round-step."""
         f = self.flight
+        tr, log = self.metrics.tracer, self.metrics.event_log
         f.finish_step(now, self.metrics)
         if not f.members:
             self.metrics.batch_service.observe(f.total_service)
+            if tr is not None and f.span is not None:
+                tr.end(f.span, now, n_refills=f.n_refills)
             self.flight = None
             return
         if self.preempt and f.best_effort() and f.min_rounds_left() > 1 \
@@ -294,6 +325,18 @@ class Device:
             self.metrics.incr("preemptions")
             self.metrics.incr("requests_preempted", len(evicted))
             self.metrics.batch_service.observe(f.total_service)
+            if tr is not None:
+                for r in evicted:
+                    tr.instant("preempt", now, parent=tr.ensure_root(r),
+                               track=f"tenant:{r.tenant}",
+                               request_id=r.request_id,
+                               device=self.device_id)
+                if f.span is not None:
+                    tr.end(f.span, now, preempted=True,
+                           n_evicted=len(evicted), n_refills=f.n_refills)
+            if log is not None:
+                for r in evicted:
+                    log.emit("preempted", now, r, device=self.device_id)
             self.flight = None
             return
         if self.continuous_batching:
@@ -301,6 +344,7 @@ class Device:
                 now, f.workload, f.groups, f.free, self.policy.max_batch)
             if joined:
                 f.absorb(joined, now)
+                f.n_refills += 1
         self._begin_step(now)
 
     def _deadline_batch_ready(self, now: float) -> bool:

@@ -63,8 +63,20 @@ class Router:
             dev = self._least_loaded(self.devices, now)
         else:
             dev = self._affinity(req.workload, now)
-        self.metrics.incr("routing_hits" if dev.is_warm(req.workload)
-                          else "routing_misses")
+        warm = dev.is_warm(req.workload)
+        self.metrics.incr("routing_hits" if warm else "routing_misses")
+        tr, log = self.metrics.tracer, self.metrics.event_log
+        if tr is not None:
+            # the router touches a request before any queue: this
+            # materializes the root span, with the placement decision
+            # as its first child
+            tr.instant("route", now, parent=tr.ensure_root(req),
+                       track=f"tenant:{req.tenant}",
+                       request_id=req.request_id, device=dev.device_id,
+                       policy=self.policy, warm=warm)
+        if log is not None:
+            log.emit("routed", now, req, device=dev.device_id,
+                     policy=self.policy, warm=warm)
         return dev
 
     def _least_loaded(self, candidates: List[Device],

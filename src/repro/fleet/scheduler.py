@@ -58,11 +58,15 @@ class FleetScheduler:
                  = generate_load_save_pipeline,
                  pass_config: Optional[PassConfig] = None,
                  continuous_batching: bool = False,
-                 preempt: bool = False):
+                 preempt: bool = False,
+                 latency_reservoir: Optional[int] = None):
         assert n_devices >= 1
         self.params = params
         self.mem = mem
-        self.metrics = MetricsRegistry(n_partitions=mem.n_partitions)
+        # latency_reservoir bounds the latency accumulators' memory on
+        # fig20-scale sweeps (None = exact, unbounded)
+        self.metrics = MetricsRegistry(n_partitions=mem.n_partitions,
+                                       latency_reservoir=latency_reservoir)
         self.policy = policy or BatchPolicy(slots_per_ct=params.slots)
         self.pass_config = pass_config
         self.continuous_batching = continuous_batching
@@ -176,6 +180,8 @@ class FleetScheduler:
                 break              # only expired/unservable work left
             now = max(math.nextafter(now, math.inf), min(events))
         self.metrics.elapsed_s = max(self.metrics.elapsed_s, now - start_s)
+        if self.metrics.tracer is not None:
+            self.metrics.tracer.close_open(now)
         return self.metrics
 
 
@@ -184,13 +190,15 @@ def build_fleet(params: CkksParams, mem: MemoryModel, *, n_devices: int,
                 policy: Optional[BatchPolicy] = None, cache_bytes: int = 0,
                 pass_config: Optional[PassConfig] = None,
                 continuous_batching: bool = False,
-                preempt: bool = False) -> FleetScheduler:
+                preempt: bool = False,
+                latency_reservoir: Optional[int] = None) -> FleetScheduler:
     """Keyword-armored convenience constructor (the serve_fhe/fig20
     entry point)."""
     return FleetScheduler(
         params, mem, n_devices=n_devices, backend=backend, router=router,
         policy=policy, cache_bytes=cache_bytes, pass_config=pass_config,
-        continuous_batching=continuous_batching, preempt=preempt)
+        continuous_batching=continuous_batching, preempt=preempt,
+        latency_reservoir=latency_reservoir)
 
 
 __all__ = ["FleetScheduler", "build_fleet", "POLICIES"]

@@ -210,6 +210,16 @@ def main() -> None:
                     help="run the optimizing trace compiler "
                          "(repro.compiler) before pipeline mapping; "
                          "--no-opt serves every trace verbatim")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="record per-request span trees (repro.obs) and "
+                         "write a Chrome/Perfetto trace_event JSON here "
+                         "(load in https://ui.perfetto.dev or "
+                         "chrome://tracing); one track per device, one "
+                         "per tenant")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit one JSON line per request lifecycle "
+                         "event (accepted/routed/preempted/completed/"
+                         "dropped...) to stdout as it happens")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -284,8 +294,25 @@ def main() -> None:
     ex.warmup()
     print(f"warmup (compile + key preload): "
           f"{_time.perf_counter() - t0:.2f} s")
+    # observability: the tracer/event log hang off the shared registry
+    # (fleet devices all share ex.metrics), attached after warmup so
+    # deploy-time work stays out of the serving trace
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = ex.metrics.tracer = Tracer()
+    if args.log_json:
+        from repro.obs import JsonEventLog
+        ex.metrics.event_log = JsonEventLog(sys.stdout)
     m = ex.serve(arrivals)
     print(m.format_table())
+    if tracer is not None:
+        from repro.obs import write_trace
+        wall = args.backend in ("mesh", "ciphertext")
+        obj = write_trace(tracer.store, args.trace_out,
+                          clock="wall" if wall else "virtual")
+        print(f"trace: {len(tracer.store)} spans "
+              f"({len(obj['traceEvents'])} events) -> {args.trace_out}")
 
     if args.backend == "ciphertext":
         tol = (ex.devices[0].backend if args.fleet > 0

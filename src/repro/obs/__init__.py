@@ -1,0 +1,31 @@
+"""End-to-end request tracing & profiling for the serving stack.
+
+Span trees from fleet admission down to PIM instruction streams, with
+Chrome/Perfetto ``trace_event`` export and an in-process store tests
+and the critical-path analyzer query directly.
+
+Enable by attaching a `Tracer` (and optionally a `JsonEventLog`) to
+the run's shared `MetricsRegistry`::
+
+    metrics.tracer = Tracer()
+    ex.serve(...)
+    write_trace(metrics.tracer.store, "trace.json")
+
+Absence of a tracer is the disabled state — every emission site in the
+runtime guards on ``metrics.tracer is None``, so a run without one is
+bit-for-bit identical to a build without this package (regression-
+tested against a metrics golden).
+"""
+from repro.obs.span import Span, SpanStore
+from repro.obs.tracer import ExecObs, Tracer
+from repro.obs.log import EVENTS, JsonEventLog
+from repro.obs.perfetto import (to_trace_events, validate, validate_file,
+                                write_trace)
+from repro.obs.critical_path import (Segment, critical_path, request_chain,
+                                     workload_breakdown)
+
+__all__ = [
+    "Span", "SpanStore", "Tracer", "ExecObs", "JsonEventLog", "EVENTS",
+    "to_trace_events", "write_trace", "validate", "validate_file",
+    "Segment", "critical_path", "request_chain", "workload_breakdown",
+]

@@ -61,13 +61,21 @@ class PimBackend:
 
     def round_seconds(self, schedule: PipelineSchedule, rnd, b: int, *,
                       key_cache, metrics, workload: str,
-                      breakdown: Optional[List[dict]] = None) -> float:
+                      breakdown: Optional[List[dict]] = None,
+                      obs=None) -> float:
         """One pipeline round of the lowered instruction stream at batch
         occupancy ``b`` — the simulation unit the fleet's
         continuous-batching path steps (same contract as
-        AnalyticBackend.round_seconds)."""
+        AnalyticBackend.round_seconds).
+
+        With ``obs`` (repro.obs.ExecObs) the round emits a ``round``
+        span plus per-stage ``stage`` spans attributed all the way down
+        to the lowered ISA: per instruction-class (LOAD/ROWOP/NTT/
+        XFER/STORE) and per-bank cycle counts from the instruction
+        stream — the trace-view analogue of fig19's breakdown."""
         prog = self.program_for(schedule)
         round_times = []
+        rows = []
         for st in rnd:
             load_s, comp_s, move_s, out_s = prog.stage_seconds(st.idx)
             if schedule.reload_per_op:
@@ -81,25 +89,41 @@ class PimBackend:
             busy = load_s + max(exec_s, xfer_s)
             metrics.occupancy.add(st.partition, busy)
             round_times.append((busy, exec_s, xfer_s))
+            row = {"stage": st.idx, "partition": st.partition,
+                   "load_s": load_s, "compute_s": b * comp_s,
+                   "move_s": b * move_s + xfer_s, "busy_s": busy}
+            rows.append(row)
             if breakdown is not None:
-                breakdown.append({
-                    "stage": st.idx, "partition": st.partition,
-                    "load_s": load_s, "compute_s": b * comp_s,
-                    "move_s": b * move_s + xfer_s, "busy_s": busy})
+                breakdown.append(row)
         worst = max(t[0] for t in round_times)
         fill = sum(max(e, x) / b for (_, e, x) in round_times)
+        if obs is not None:
+            rspan = obs.tracer.begin("round", obs.t0, parent=obs.parent,
+                                     track=obs.track, n_stages=len(rnd),
+                                     b=b)
+            for st, row in zip(rnd, rows):
+                obs.tracer.span(
+                    "stage", obs.t0, obs.t0 + row["busy_s"], parent=rspan,
+                    track=obs.track, stage=st.idx,
+                    partition=st.partition, load_s=row["load_s"],
+                    compute_s=row["compute_s"], move_s=row["move_s"],
+                    isa_cycles={k: round(v, 4) for k, v in
+                                prog.stage_class_cycles(st.idx).items()},
+                    bank_cycles={str(k): round(v, 4) for k, v in
+                                 prog.stage_bank_cycles(st.idx).items()})
+            obs.tracer.end(rspan, obs.t0 + worst + fill)
         return worst + fill
 
     def execute(self, schedule: PipelineSchedule, batch, *,
-                key_cache, metrics, workload: str) -> float:
+                key_cache, metrics, workload: str, obs=None) -> float:
         b = max(1, batch.n_ciphertexts)
         breakdown: List[dict] = []
         total = 0.0
         for rnd in schedule.rounds:
-            total += self.round_seconds(schedule, rnd, b,
-                                        key_cache=key_cache,
-                                        metrics=metrics, workload=workload,
-                                        breakdown=breakdown)
+            total += self.round_seconds(
+                schedule, rnd, b, key_cache=key_cache, metrics=metrics,
+                workload=workload, breakdown=breakdown,
+                obs=obs.at(obs.t0 + total) if obs is not None else None)
         self.last_breakdown[workload] = breakdown
         return total
 

@@ -40,6 +40,10 @@ class PimInstr:
     nbytes: int = 0      # bytes streamed (LOAD) or moved (XFER/STORE)
     scope: str = ""      # intra|bank|channel|load for XFER/STORE/LOAD
     cycles: float = 0.0
+    op_kind: str = ""    # source trace-op kind ("mul", "rotate", ...);
+    #                      observability only — deliberately NOT in
+    #                      to_jsonable, so the pim_streams goldens are
+    #                      insensitive to it
 
     def to_jsonable(self) -> dict:
         d = {"opcode": self.opcode, "stage": self.stage,
@@ -91,6 +95,31 @@ class PimProgram:
         f = self.freq_hz
         load, comp, move, out = self._buckets[stage]
         return load / f, comp / f, move / f, out / f
+
+    def stage_class_cycles(self, stage: int) -> Dict[str, float]:
+        """Per instruction-class cycle totals for one stage
+        ({opcode: cycles}, every opcode present) — the PIM backend
+        attributes execute spans down to these."""
+        self._class_index()
+        return dict(self._by_class[stage])
+
+    def stage_bank_cycles(self, stage: int) -> Dict[int, float]:
+        """Per-bank cycle totals for one stage ({bank: cycles})."""
+        self._class_index()
+        return dict(self._by_bank[stage])
+
+    def _class_index(self) -> None:
+        if getattr(self, "_by_class", None) is None:
+            by_class = [{op: 0.0 for op in OPCODES}
+                        for _ in range(self.n_stages)]
+            by_bank: List[Dict[int, float]] = [
+                {} for _ in range(self.n_stages)]
+            for i in self.instrs:
+                by_class[i.stage][i.opcode] += i.cycles
+                bb = by_bank[i.stage]
+                bb[i.bank] = bb.get(i.bank, 0.0) + i.cycles
+            self._by_class = by_class
+            self._by_bank = by_bank
 
     def summary(self) -> Dict[str, float]:
         by_op: Dict[str, int] = {}

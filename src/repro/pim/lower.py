@@ -72,19 +72,22 @@ def lower_schedule(schedule: PipelineSchedule, arch: PimArch,
                 weighted = c.modmuls + arch.ks_modmul_weight * c.ks_modmuls
                 instrs.append(PimInstr(
                     "ROWOP", st.idx, op.idx, ch, bk, rows=rows,
-                    cycles=arch.rows_seconds(weighted, n) * f))
+                    cycles=arch.rows_seconds(weighted, n) * f,
+                    op_kind=op.kind))
             if c.ntts:
                 instrs.append(PimInstr(
                     "NTT", st.idx, op.idx, ch, bk, rows=c.ntts,
                     cycles=arch.rows_seconds(
                         c.ntts * arch.ntt_row_cost
-                        * math.log2(max(n, 2)), n) * f))
+                        * math.log2(max(n, 2)), n) * f,
+                    op_kind=op.kind))
                 shuffle_b = c.ntts * arch.ntt_shuffle_bytes(n)
                 if shuffle_b:
                     instrs.append(PimInstr(
                         "XFER", st.idx, op.idx, ch, bk, nbytes=shuffle_b,
                         scope="intra",
-                        cycles=arch.xfer_seconds(shuffle_b, "intra") * f))
+                        cycles=arch.xfer_seconds(shuffle_b, "intra") * f,
+                        op_kind=op.kind))
             if c.move_bytes:
                 # ModUp/ModDown limb distribution stays bank-local; only
                 # the automorphism's slot permutation (the ciphertext
@@ -101,12 +104,14 @@ def lower_schedule(schedule: PipelineSchedule, arch: PimArch,
                     instrs.append(PimInstr(
                         "XFER", st.idx, op.idx, ch, bk, nbytes=intra_b,
                         scope="intra",
-                        cycles=arch.xfer_seconds(intra_b, "intra") * f))
+                        cycles=arch.xfer_seconds(intra_b, "intra") * f,
+                        op_kind=op.kind))
                 if perm_b:
                     instrs.append(PimInstr(
                         "XFER", st.idx, op.idx, ch, bk, nbytes=perm_b,
                         scope="bank",
-                        cycles=arch.xfer_seconds(perm_b, "bank") * f))
+                        cycles=arch.xfer_seconds(perm_b, "bank") * f,
+                        op_kind=op.kind))
 
         # stage output hops to the next stage's bank
         if st.out_bytes:

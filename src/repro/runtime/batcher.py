@@ -218,4 +218,14 @@ class SlotBatcher:
         if joined:
             self.metrics.incr("continuous_refills")
             self.metrics.incr("requests_refilled", len(joined))
+            tr = self.metrics.tracer
+            if tr is not None:
+                # mark mid-flight joins on the request tree: the join
+                # instant vs the later service span shows how long the
+                # rider trailed the lead wave
+                for r in joined:
+                    tr.instant("batch_join", now,
+                               parent=tr.ensure_root(r),
+                               track=f"tenant:{r.tenant}",
+                               request_id=r.request_id, workload=workload)
         return joined

@@ -10,6 +10,7 @@ model share one compiled schedule.
 from __future__ import annotations
 
 import hashlib
+import time
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.compiler import PassConfig, optimize_trace
@@ -64,11 +65,20 @@ class CompileCache:
                      mapper: Callable[..., PipelineSchedule]
                      = generate_load_save_pipeline,
                      pass_config: Optional[PassConfig] = None,
-                     **mapper_kwargs) -> PipelineSchedule:
+                     obs=None, **mapper_kwargs) -> PipelineSchedule:
         """Optionally run the optimizing compiler (repro.compiler) on the
         trace before mapping. `pass_config` participates in the cache
         key, so opt and no-opt schedules of one workload — or two
-        different pass selections — never collide."""
+        different pass selections — never collide.
+
+        ``obs`` is an optional `repro.obs.ExecObs` (an explicit kwarg —
+        it must never leak into ``mapper_kwargs``, which participate in
+        the cache key): with it, a ``compile`` span lands under the
+        caller's batch span — zero duration on the serving timeline
+        (compilation never advances the virtual clock; service time
+        starts at backend.execute) but carrying the measured wall
+        seconds, hit/miss, and on a miss one child span per compiler
+        pass from the attached PassReport."""
         key = (trace_fingerprint(trace), _params_key(params), _mem_key(mem),
                getattr(mapper, "__name__", repr(mapper)),
                pass_config.key() if pass_config is not None else None,
@@ -78,8 +88,27 @@ class CompileCache:
             self.metrics.incr("compile_hits")
         else:
             self.metrics.incr("compile_misses")
+            t0 = time.perf_counter()
+            report = None
             if pass_config is not None:
-                trace, _report = optimize_trace(trace, params, pass_config)
+                trace, report = optimize_trace(trace, params, pass_config)
                 self.metrics.incr("traces_optimized")
-            self._cache[key] = mapper(trace, params, mem, **mapper_kwargs)
-        return self._cache[key]
+            sched = mapper(trace, params, mem, **mapper_kwargs)
+            sched.pass_report = report
+            sched._compile_wall_s = time.perf_counter() - t0
+            self._cache[key] = sched
+        sched = self._cache[key]
+        if obs is not None:
+            c = obs.tracer.instant(
+                "compile", obs.t0, parent=obs.parent, track=obs.track,
+                hit=hit, wall_s=0.0 if hit
+                else getattr(sched, "_compile_wall_s", 0.0),
+                n_stages=len(sched.stages))
+            if not hit and sched.pass_report is not None:
+                for s in sched.pass_report.passes:
+                    obs.tracer.instant(
+                        "pass:" + s.name, obs.t0, parent=c,
+                        track=obs.track, wall_s=s.wall_s,
+                        applied=s.applied, reverted=s.reverted,
+                        ops_before=s.n_ops_before, ops_after=s.n_ops_after)
+        return sched

@@ -40,6 +40,7 @@ from repro.core.pipeline import (MemoryModel, PipelineSchedule,
                                  generate_load_save_pipeline)
 from repro.core.trace import (FheTrace, LevelBudgetExhausted, infer_levels,
                               trace_program)
+from repro.obs.tracer import ExecObs
 from repro.runtime.batcher import Batch, BatchPolicy, SlotBatcher
 from repro.runtime.compile_cache import CompileCache
 from repro.runtime.keycache import KeyCache
@@ -74,7 +75,8 @@ class AnalyticBackend:
 
     def round_seconds(self, schedule: PipelineSchedule, rnd, b: int, *,
                       key_cache: Optional[KeyCache],
-                      metrics: MetricsRegistry, workload: str) -> float:
+                      metrics: MetricsRegistry, workload: str,
+                      obs: Optional[ExecObs] = None) -> float:
         # the schedule's own cost model is the single source of truth;
         # the key cache only substitutes the load term: a resident
         # stage streams nothing (reload_per_op stages overflow the
@@ -93,17 +95,32 @@ class AnalyticBackend:
         # bounds the steady state, plus pipeline fill
         worst = max(t[0] for t in round_times)
         fill = sum(max(c, t) / b for (_, c, t) in round_times)
+        if obs is not None:
+            # stages of one round run pipelined, so their spans share
+            # the round's start and nest by containment in the viewer
+            rspan = obs.tracer.begin("round", obs.t0, parent=obs.parent,
+                                     track=obs.track, n_stages=len(rnd),
+                                     b=b)
+            for st, (busy, compute, transfer) in zip(rnd, round_times):
+                obs.tracer.span(
+                    "stage", obs.t0, obs.t0 + busy, parent=rspan,
+                    track=obs.track, stage=st.idx, partition=st.partition,
+                    load_s=busy - max(compute, transfer),
+                    compute_s=compute, move_s=transfer)
+            obs.tracer.end(rspan, obs.t0 + worst + fill)
         return worst + fill
 
     def execute(self, schedule: PipelineSchedule, batch: Batch, *,
                 key_cache: Optional[KeyCache],
-                metrics: MetricsRegistry, workload: str) -> float:
+                metrics: MetricsRegistry, workload: str,
+                obs: Optional[ExecObs] = None) -> float:
         b = max(1, batch.n_ciphertexts)
         total = 0.0
         for rnd in schedule.rounds:
-            total += self.round_seconds(schedule, rnd, b,
-                                        key_cache=key_cache,
-                                        metrics=metrics, workload=workload)
+            total += self.round_seconds(
+                schedule, rnd, b, key_cache=key_cache, metrics=metrics,
+                workload=workload,
+                obs=obs.at(obs.t0 + total) if obs is not None else None)
         return total
 
 
@@ -181,7 +198,8 @@ class MeshBackend:
 
     def execute(self, schedule: PipelineSchedule, batch: Batch, *,
                 key_cache: Optional[KeyCache],
-                metrics: MetricsRegistry, workload: str) -> float:
+                metrics: MetricsRegistry, workload: str,
+                obs: Optional[ExecObs] = None) -> float:
         import jax
         from repro.fhe_dist.pipeline_exec import run_load_save_pipeline
 
@@ -226,6 +244,12 @@ class MeshBackend:
         for st in schedule.stages:
             metrics.occupancy.add(st.partition, dt / n_rounds)
         batch.outputs = out
+        if obs is not None:
+            # the mesh measures one fused XLA dispatch — no per-stage
+            # decomposition, so a single execute span carries the total
+            obs.tracer.span("xla_execute", obs.t0, obs.t0 + dt,
+                            parent=obs.parent, track=obs.track,
+                            n_rounds=n_rounds, n_micro=n_micro)
         return dt
 
 
@@ -234,18 +258,38 @@ class MeshBackend:
 # ---------------------------------------------------------------------------
 
 def record_request_completion(metrics: MetricsRegistry, r: Request,
-                              done: float, service_start_s: float) -> bool:
+                              done: float, service_start_s: float,
+                              batch_span: Optional[int] = None) -> bool:
     """One request leaves the system: deadline check, latency +
     queue-delay/service-time decomposition, per-tenant attribution.
     Shared by the single executor and every fleet device so their
-    accounting can never drift. Returns True iff completed in time."""
+    accounting can never drift. Returns True iff completed in time.
+
+    With tracing on, this is also the single site that completes a
+    request's span tree: queue_wait and service children under the
+    root, the service span linking (``batch_span``) to the batch that
+    carried it, and the root closed with the terminal status — so the
+    root's duration IS the recorded latency, by construction."""
     r.completion_s = done
     r.service_start_s = service_start_s
     metrics.incr("requests_served")
+    tr, log = metrics.tracer, metrics.event_log
+    if tr is not None:
+        root = tr.ensure_root(r)
+        track = f"tenant:{r.tenant}"
+        tr.span("queue_wait", r.arrival_s, service_start_s, parent=root,
+                track=track, request_id=r.request_id)
+        link = {} if batch_span is None else {"batch_span": batch_span}
+        tr.span("service", service_start_s, done, parent=root,
+                track=track, request_id=r.request_id, **link)
     if r.deadline_s is not None and done > r.deadline_s:
         r.status = RequestStatus.DEADLINE_MISS
         metrics.incr("deadline_misses")
         metrics.incr_tenant("deadline_misses", r.tenant)
+        if tr is not None:
+            tr.close_root(r, done, "deadline_miss")
+        if log is not None:
+            log.emit("deadline_miss", done, r)
         return False
     r.status = RequestStatus.COMPLETED
     metrics.request_latency.observe(r.latency())
@@ -255,6 +299,10 @@ def record_request_completion(metrics: MetricsRegistry, r: Request,
     metrics.incr_tenant("requests_completed", r.tenant)
     if r.deadline_s is not None:
         metrics.incr("requests_goodput")
+    if tr is not None:
+        tr.close_root(r, done, "completed", latency_s=r.latency())
+    if log is not None:
+        log.emit("completed", done, r, latency_s=r.latency())
     return True
 
 
@@ -369,6 +417,12 @@ class PipelinedExecutor:
         if req.slots_needed > self.policy.slots_per_ct:
             req.status = RequestStatus.REJECTED
             self.metrics.incr("requests_oversized")
+            tr, log = self.metrics.tracer, self.metrics.event_log
+            if tr is not None:
+                tr.close_root(req, req.arrival_s, "rejected",
+                              reason="oversized")
+            if log is not None:
+                log.emit("rejected", req.arrival_s, req, reason="oversized")
         else:
             self.queue.submit(req)
 
@@ -402,16 +456,27 @@ class PipelinedExecutor:
         return time.perf_counter() - t0
 
     def _execute_batch(self, batch: Batch, now: float) -> float:
+        tr = self.metrics.tracer
+        bspan = obs = None
+        if tr is not None:
+            bspan = tr.begin(f"batch:{batch.workload}", now,
+                             track="device:0", workload=batch.workload,
+                             n_requests=len(batch.requests),
+                             n_ciphertexts=batch.n_ciphertexts)
+            obs = ExecObs(tr, bspan, now, "device:0")
         sched = self.compile_cache.get_schedule(
             self.workloads[batch.workload].trace, self.params, self.mem,
-            self.mapper, pass_config=self.pass_config)
+            self.mapper, pass_config=self.pass_config, obs=obs)
         service_s = self.backend.execute(
             sched, batch, key_cache=self.key_cache, metrics=self.metrics,
-            workload=batch.workload)
+            workload=batch.workload, obs=obs)
         done = now + service_s
+        if tr is not None:
+            tr.end(bspan, done)
         for r in batch.requests:
             record_request_completion(self.metrics, r, done,
-                                      service_start_s=now)
+                                      service_start_s=now,
+                                      batch_span=bspan)
         self.metrics.batch_service.observe(service_s)
         return service_s
 
@@ -448,4 +513,6 @@ class PipelinedExecutor:
                 break                  # only expired/unservable work left
             now = max(math.nextafter(now, math.inf), min(events))
         self.metrics.elapsed_s = max(self.metrics.elapsed_s, now - start_s)
+        if self.metrics.tracer is not None:
+            self.metrics.tracer.close_open(now)
         return self.metrics

@@ -6,43 +6,82 @@ analytic (virtual-clock) and mesh (wall-clock) backends.
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
+import random
+import zlib
 from typing import Dict, List, Optional
 
 
 class LatencyStats:
-    """Streaming latency accumulator with exact percentiles.
+    """Streaming latency accumulator.
 
-    Samples are kept sorted (bisect insert) — serving smoke tests and
-    benchmarks see 1e2..1e5 samples, where O(n) insertion is fine and
-    exactness beats a sketch.
+    Default mode keeps every sample and reports **exact** nearest-rank
+    percentiles — serving smoke tests and benchmarks see 1e2..1e5
+    samples, where that is fine and exactness beats a sketch. Samples
+    are appended and sorted lazily on first query (amortized O(n log n)
+    total, vs the old per-observe ``bisect.insort`` which was O(n) per
+    sample and O(n^2) over a long fleet sweep).
+
+    ``reservoir=R`` bounds memory for million-request sweeps
+    (fig20-scale fleets): below R samples everything is kept and
+    percentiles stay exact; above, Vitter's Algorithm R keeps a
+    uniform R-sample for percentiles while ``count`` / ``mean`` /
+    ``max`` remain exact always. The reservoir RNG is seeded from the
+    stat's name, so runs are deterministic.
     """
 
-    def __init__(self, name: str = "latency"):
+    def __init__(self, name: str = "latency",
+                 reservoir: Optional[int] = None):
+        if reservoir is not None and reservoir < 1:
+            raise ValueError("reservoir size must be >= 1")
         self.name = name
-        self._sorted: List[float] = []
+        self.reservoir = reservoir
+        self._samples: List[float] = []
+        self._dirty = False
         self._sum = 0.0
+        self._count = 0
+        self._max = 0.0
+        self._rng = (random.Random(zlib.crc32(name.encode()) ^ 0x5EED)
+                     if reservoir is not None else None)
 
     def observe(self, seconds: float) -> None:
-        bisect.insort(self._sorted, seconds)
+        self._count += 1
         self._sum += seconds
+        if self._count == 1 or seconds > self._max:
+            self._max = seconds
+        if self.reservoir is None or len(self._samples) < self.reservoir:
+            self._samples.append(seconds)
+            self._dirty = True
+        else:
+            # Algorithm R: keep each of the n samples with prob R/n
+            j = self._rng.randrange(self._count)
+            if j < self.reservoir:
+                self._samples[j] = seconds
+                self._dirty = True
+
+    def _view(self) -> List[float]:
+        if self._dirty:
+            self._samples.sort()
+            self._dirty = False
+        return self._samples
 
     @property
     def count(self) -> int:
-        return len(self._sorted)
+        return self._count
 
     @property
     def mean(self) -> float:
-        return self._sum / len(self._sorted) if self._sorted else 0.0
+        return self._sum / self._count if self._count else 0.0
 
     def percentile(self, p: float) -> float:
-        """Exact p-th percentile (0 <= p <= 100), nearest-rank."""
-        if not self._sorted:
+        """Nearest-rank p-th percentile (0 <= p <= 100) — exact while
+        all samples are retained, reservoir-estimated past the bound."""
+        view = self._view()
+        if not view:
             return 0.0
-        k = min(len(self._sorted) - 1,
-                max(0, int(round(p / 100.0 * (len(self._sorted) - 1)))))
-        return self._sorted[k]
+        k = min(len(view) - 1,
+                max(0, int(round(p / 100.0 * (len(view) - 1)))))
+        return view[k]
 
     @property
     def p50(self) -> float:
@@ -58,7 +97,7 @@ class LatencyStats:
 
     @property
     def max(self) -> float:
-        return self._sorted[-1] if self._sorted else 0.0
+        return self._max if self._count else 0.0
 
     def summary(self) -> Dict[str, float]:
         return {"count": self.count, "mean_s": self.mean,
@@ -98,16 +137,18 @@ class MetricsRegistry:
     queue-delay vs service-time latency decomposition all land here
     next to the single-executor metrics."""
 
-    def __init__(self, n_partitions: int = 1):
-        self.request_latency = LatencyStats("request_latency")
-        self.queue_wait = LatencyStats("queue_wait")
+    def __init__(self, n_partitions: int = 1,
+                 latency_reservoir: Optional[int] = None):
+        r = latency_reservoir
+        self.request_latency = LatencyStats("request_latency", reservoir=r)
+        self.queue_wait = LatencyStats("queue_wait", reservoir=r)
         # latency decomposition: request_latency = queue_delay (arrival
         # -> service start, the batcher/scheduler's share) + service
         # time (service start -> completion, the backend's share), so
         # p99 growth under load is attributable to queueing vs compute
-        self.queue_delay = LatencyStats("queue_delay")
-        self.service_time = LatencyStats("service_time")
-        self.batch_service = LatencyStats("batch_service")
+        self.queue_delay = LatencyStats("queue_delay", reservoir=r)
+        self.service_time = LatencyStats("service_time", reservoir=r)
+        self.batch_service = LatencyStats("batch_service", reservoir=r)
         self.occupancy = PartitionOccupancy(n_partitions)
         self.counters: Dict[str, int] = {}
         # per-tenant counters (deadline_misses, requests_completed):
@@ -121,6 +162,13 @@ class MetricsRegistry:
         # max |decoded - reference| over every slot of every batch served
         self.decrypt_error: Dict[str, float] = {}
         self.elapsed_s = 0.0
+        # observability attachment points (repro.obs). None = disabled;
+        # every emission site in the stack guards on these being None,
+        # so an untraced run does no work beyond the attribute read —
+        # the bit-for-bit metrics regression in tests/test_obs.py pins
+        # that down. Deliberately NOT part of summary().
+        self.tracer = None            # Optional[repro.obs.Tracer]
+        self.event_log = None         # Optional[repro.obs.JsonEventLog]
 
     def observe_decrypt_error(self, workload: str, err: float) -> None:
         prev = self.decrypt_error.get(workload, 0.0)

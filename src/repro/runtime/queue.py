@@ -75,13 +75,25 @@ class AdmissionQueue:
 
     def submit(self, req: Request) -> bool:
         """Admit or reject (tenant queue full). Returns admitted."""
+        tr, log = self.metrics.tracer, self.metrics.event_log
         q = self.queues.setdefault(req.tenant, deque())
         if len(q) >= self.max_depth:
             req.status = RequestStatus.REJECTED
             self.metrics.incr("requests_rejected")
+            if tr is not None:
+                tr.close_root(req, req.arrival_s, "rejected",
+                              reason="tenant_queue_full")
+            if log is not None:
+                log.emit("rejected", req.arrival_s, req,
+                         reason="tenant_queue_full")
             return False
         q.append(req)
         self.metrics.incr("requests_admitted")
+        if tr is not None:
+            tr.ensure_root(req)
+        if log is not None:
+            log.emit("accepted", req.arrival_s, req,
+                     queue_depth=len(q))
         return True
 
     # -- dequeue -------------------------------------------------------------
@@ -94,6 +106,7 @@ class AdmissionQueue:
         not silently discarded)."""
         if not any(r.expired(now) for r in q):
             return
+        tr, log = self.metrics.tracer, self.metrics.event_log
         live = []
         for r in q:
             if r.expired(now):
@@ -101,6 +114,10 @@ class AdmissionQueue:
                 self.metrics.incr("deadline_misses")
                 self.metrics.incr("deadline_misses_dequeue")
                 self.metrics.incr_tenant("deadline_misses", r.tenant)
+                if tr is not None:
+                    tr.close_root(r, now, "dropped_expired")
+                if log is not None:
+                    log.emit("dropped", now, r)
             else:
                 live.append(r)
         q.clear()

@@ -1,0 +1,76 @@
+"""Shared deterministic serving scenario for the observability tests.
+
+One fixed (params, memory model, workload registry, arrival stream)
+tuple used by tests/test_obs.py for three different regressions:
+
+* the disabled-tracer bit-for-bit golden (metrics summary must equal
+  the snapshot captured from pre-tracing main),
+* enabled-vs-disabled metric identity on virtual-clock backends,
+* span-tree completeness/integrity checks.
+
+Kept import-light (no repro.obs dependency) so the golden can be
+regenerated against any revision of the runtime alone.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.compiler import PassConfig
+from repro.core.params import test_params
+from repro.core.pipeline import MemoryModel
+from repro.runtime import BatchPolicy, KeyCache, PipelinedExecutor, Request
+from repro.runtime.workloads import (HELR_CONSTS, LOLA_CONSTS, lola_infer,
+                                     make_helr_iter, make_matvec,
+                                     matvec_consts)
+
+PARAMS = test_params(log_n=10, n_levels=8, dnum=2)
+MEM = MemoryModel(n_partitions=4, partition_bytes=8 * 2 ** 20)
+START = 7
+
+
+def register_workloads(ex) -> None:
+    ex.register("helr", make_helr_iter(), 2, const_names=HELR_CONSTS,
+                start_level=START)
+    ex.register("lola", lola_infer, 1, const_names=LOLA_CONSTS,
+                start_level=START)
+    ex.register("matvec16", make_matvec(16), 1,
+                const_names=matvec_consts(16), start_level=START)
+
+
+def build_executor(backend="analytic", cache_mb: int = 64,
+                   max_batch: int = 4) -> PipelinedExecutor:
+    policy = BatchPolicy(slots_per_ct=PARAMS.slots, max_batch=max_batch,
+                         max_wait_s=2e-3)
+    kc = (KeyCache(cache_mb * 2 ** 20, load_bw=MEM.load_bw)
+          if cache_mb else None)
+    return_ex = PipelinedExecutor(PARAMS, MEM, backend=backend,
+                                  policy=policy, key_cache=kc,
+                                  pass_config=PassConfig(start_level=START))
+    register_workloads(return_ex)
+    return return_ex
+
+
+def make_arrivals(ex, n_requests: int = 48, rate_rps: float = 3000.0,
+                  seed: int = 11, deadline_s: float = 0.05,
+                  max_slots: int = 64):
+    """Poisson stream over three tenants; two of three requests carry a
+    deadline so completion, miss, and best-effort paths all run."""
+    rng = np.random.default_rng(seed)
+    names = sorted(ex.workloads)
+    out, t = [], 0.0
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        out.append(Request(
+            ex.next_request_id(), tenant=f"tenant{i % 3}",
+            workload=names[i % len(names)], arrival_s=t,
+            slots_needed=int(rng.integers(1, max_slots + 1)),
+            deadline_s=t + deadline_s if i % 3 else None))
+    return out
+
+
+def run_scenario(backend="analytic", **arrival_kw):
+    """Build, warm up, serve. Returns (executor, metrics)."""
+    ex = build_executor(backend)
+    ex.warmup()
+    m = ex.serve(make_arrivals(ex, **arrival_kw))
+    return ex, m

@@ -1,0 +1,418 @@
+"""repro.obs: end-to-end tracing regressions.
+
+The load-bearing guarantees, in test order:
+
+* **zero-overhead-when-disabled** — with no tracer attached the serving
+  metrics are bit-for-bit the golden captured from pre-tracing main
+  (tests/golden/metrics_baseline.json, REGEN_GOLDENS=1 to refresh);
+* **observe, never perturb** — attaching a tracer leaves every metric
+  of a virtual-clock serve bit-for-bit unchanged (analytic AND pim);
+* **span-tree completeness/integrity** — every terminal request has a
+  closed root whose duration IS its recorded latency; children nest
+  inside parents; parents resolve; nothing stays open after serve;
+* **fleet(N=1) anchor extended to spans** — the one-device fleet emits
+  the single executor's span timeline (same names, times, tracks);
+* **export** — the Perfetto trace_event JSON passes the validator;
+* plus the satellites: drop/preempt/refill trace paths, compile
+  hit/miss + per-pass spans, PIM ISA cycle attribution, critical-path
+  telescoping, bounded-reservoir LatencyStats, PassReport attachment,
+  and the JSON event log.
+"""
+import io
+import json
+import os
+
+import pytest
+
+import tests._obs_scenario as S
+from repro.compiler import PassConfig
+from repro.obs import (JsonEventLog, Tracer, critical_path, request_chain,
+                       to_trace_events, validate, workload_breakdown,
+                       write_trace)
+from repro.fleet import FleetScheduler
+from repro.pim.isa import OPCODES
+from repro.runtime import BatchPolicy, KeyCache, PipelinedExecutor
+from repro.runtime.metrics import LatencyStats, MetricsRegistry
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "metrics_baseline.json")
+
+
+# ---------------------------------------------------------------------------
+# shared runs (module-scoped: the scenario serves 48 requests through a
+# compile+warmup, so every test below reads, none re-runs)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def untraced():
+    ex, m = S.run_scenario("analytic")
+    return ex, m
+
+
+@pytest.fixture(scope="module")
+def traced():
+    ex = S.build_executor("analytic")
+    ex.metrics.tracer = Tracer()
+    ex.metrics.event_log = JsonEventLog(io.StringIO())
+    ex.warmup()
+    m = ex.serve(S.make_arrivals(ex))
+    return ex, m
+
+
+@pytest.fixture(scope="module")
+def store(traced):
+    return traced[0].metrics.tracer.store
+
+
+# ---------------------------------------------------------------------------
+# disabled == absent: the bit-for-bit golden
+# ---------------------------------------------------------------------------
+
+def test_untraced_metrics_match_pre_tracing_golden(untraced):
+    """The tracing layer must be invisible when detached: the full
+    metrics summary equals the snapshot captured before repro.obs
+    existed. Any drift here means instrumentation leaked into the
+    serving timeline."""
+    got = json.loads(json.dumps(untraced[1].summary(), sort_keys=True))
+    if os.environ.get("REGEN_GOLDENS"):
+        with open(GOLDEN, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+    assert os.path.exists(GOLDEN), \
+        "golden file missing — run with REGEN_GOLDENS=1 to create it"
+    want = json.load(open(GOLDEN))
+    assert got == want, (
+        "untraced serving metrics diverged from the pre-tracing "
+        "baseline — tracing is no longer zero-overhead-when-disabled "
+        "(if the change is intentional, regen with REGEN_GOLDENS=1)")
+
+
+@pytest.mark.parametrize("backend", ["analytic", "pim"])
+def test_tracing_leaves_metrics_bit_identical(backend, untraced, traced):
+    if backend == "analytic":
+        m_off, m_on = untraced[1], traced[1]
+    else:
+        _, m_off = S.run_scenario("pim")
+        ex = S.build_executor("pim")
+        ex.metrics.tracer = Tracer()
+        ex.warmup()
+        m_on = ex.serve(S.make_arrivals(ex))
+    assert m_on.summary() == m_off.summary()
+
+
+def test_tracer_not_in_metrics_summary(traced):
+    # the tracer rides on the registry but must never serialize with it
+    flat = json.dumps(traced[1].summary(), default=str)
+    assert "Tracer" not in flat and "tracer" not in flat
+
+
+# ---------------------------------------------------------------------------
+# span-tree completeness and integrity
+# ---------------------------------------------------------------------------
+
+def test_every_request_has_closed_root_with_terminal_status(store, traced):
+    m = traced[1]
+    roots = store.by_name("request")
+    assert len(roots) == m.count("requests_admitted")
+    assert all(s.end_s is not None for s in roots)
+    terminal = {"completed", "deadline_miss", "dropped_expired",
+                "rejected", "unfinished"}
+    assert all(s.attrs["status"] in terminal for s in roots)
+
+
+def test_root_duration_is_recorded_latency(store, traced):
+    """The acceptance criterion: root span duration == recorded
+    latency to float precision, for every served request."""
+    m = traced[1]
+    served = [s for s in store.by_name("request")
+              if s.attrs["status"] in ("completed", "deadline_miss")]
+    lat = m.request_latency
+    assert len(served) == lat.count
+    assert sorted(s.duration_s for s in served) == sorted(lat._view())
+
+
+def test_children_nest_inside_parents(store):
+    for s in store.spans:
+        if s.parent_id is None:
+            continue
+        p = store.get(s.parent_id)
+        assert p is not None, f"orphan span {s.span_id} ({s.name})"
+        assert s.start_s >= p.start_s - 1e-12, (s.name, p.name)
+        assert s.end_s <= p.end_s + 1e-12, (s.name, p.name)
+
+
+def test_no_open_spans_and_monotone_intervals(store):
+    assert not store.open_spans()
+    assert all(s.end_s >= s.start_s for s in store.spans)
+
+
+def test_service_span_links_to_batch_subtree(store):
+    for svc in store.by_name("service"):
+        bs = store.get(svc.attrs["batch_span"])
+        assert bs is not None and bs.name.startswith("batch:")
+        assert bs.track.startswith("device:")
+        # the batch carries round and stage detail
+        names = {c.name for c in store.children(bs.span_id)}
+        assert "round" in names
+
+
+def test_queue_wait_plus_service_covers_root(store):
+    for root in store.by_name("request"):
+        if root.attrs["status"] not in ("completed", "deadline_miss"):
+            continue
+        kids = {c.name: c for c in store.children(root.span_id)}
+        qw, svc = kids["queue_wait"], kids["service"]
+        assert qw.start_s == root.start_s
+        assert qw.end_s == svc.start_s
+        assert svc.end_s == root.end_s
+
+
+# ---------------------------------------------------------------------------
+# compile spans
+# ---------------------------------------------------------------------------
+
+def test_compile_spans_hit_after_warmup(store, traced):
+    compiles = store.by_name("compile")
+    assert compiles, "no compile spans emitted"
+    # warmup precompiled every workload: serving-time compiles all hit
+    assert all(c.attrs["hit"] for c in compiles)
+
+
+def test_compile_miss_emits_pass_children():
+    ex = S.build_executor("analytic")     # no warmup: first batch misses
+    ex.metrics.tracer = Tracer()
+    ex.serve(S.make_arrivals(ex, n_requests=6))
+    store = ex.metrics.tracer.store
+    misses = [c for c in store.by_name("compile") if not c.attrs["hit"]]
+    assert misses
+    m0 = misses[0]
+    assert m0.attrs["wall_s"] > 0
+    passes = [c for c in store.children(m0.span_id)
+              if c.name.startswith("pass:")]
+    assert passes, "compile miss span has no per-pass children"
+    for p in passes:
+        assert p.attrs["wall_s"] >= 0
+        assert p.attrs["ops_after"] >= 0
+
+
+def test_schedule_carries_pass_report():
+    ex = S.build_executor("analytic")
+    sched = ex.compile_cache.get_schedule(
+        ex.workloads["helr"].trace, S.PARAMS, S.MEM,
+        pass_config=PassConfig(start_level=S.START))
+    rep = sched.pass_report
+    assert rep is not None
+    assert rep.wall_s > 0
+    table = rep.format_table(include_wall=True)
+    assert "wall_ms" in table
+    # and without the flag the historical format is unchanged
+    assert "wall_ms" not in rep.format_table()
+
+
+# ---------------------------------------------------------------------------
+# PIM attribution
+# ---------------------------------------------------------------------------
+
+def test_pim_stage_spans_attribute_isa_cycles():
+    ex = S.build_executor("pim")
+    ex.metrics.tracer = Tracer()
+    ex.warmup()
+    ex.serve(S.make_arrivals(ex, n_requests=12))
+    stages = ex.metrics.tracer.store.by_name("stage")
+    assert stages
+    for s in stages:
+        isa = s.attrs["isa_cycles"]
+        assert set(isa) <= set(OPCODES)
+        assert all(v >= 0 for v in isa.values())
+        assert sum(isa.values()) > 0
+        assert s.attrs["bank_cycles"], "per-bank attribution missing"
+
+
+# ---------------------------------------------------------------------------
+# fleet: N=1 span parity with the single executor, and the
+# drop/preempt/refill paths
+# ---------------------------------------------------------------------------
+
+def _span_key(s):
+    return (s.name, round(s.start_s, 15), round(s.end_s, 15), s.track)
+
+
+def test_fleet_of_one_emits_executor_span_timeline(traced):
+    """The fleet anchor invariant, extended to observability: the
+    1-device fleet (round_robin, no continuous batching, no preempt)
+    must produce the single executor's span timeline — same span
+    names at the same virtual times on the same tracks. Fleet-only
+    `route` instants are the one permitted addition."""
+    fleet = FleetScheduler(
+        S.PARAMS, S.MEM, n_devices=1, backend="analytic",
+        router="round_robin",
+        policy=BatchPolicy(slots_per_ct=S.PARAMS.slots, max_batch=4,
+                           max_wait_s=2e-3),
+        cache_bytes=64 * 2 ** 20,
+        pass_config=PassConfig(start_level=S.START))
+    S.register_workloads(fleet)
+    fleet.warmup()
+    fleet.metrics.tracer = Tracer()
+    mf = fleet.serve(S.make_arrivals(fleet))
+
+    ex, m1 = traced
+    assert mf.elapsed_s == m1.elapsed_s
+    single = sorted(_span_key(s) for s in ex.metrics.tracer.store.spans)
+    fleet_spans = sorted(_span_key(s)
+                         for s in fleet.metrics.tracer.store.spans
+                         if s.name != "route")
+    assert fleet_spans == single
+
+
+def test_dropped_request_root_closed_with_drop_status():
+    ex = S.build_executor("analytic")
+    ex.metrics.tracer = Tracer()
+    ex.warmup()
+    # everything offered at once with deadlines shorter than one batch
+    # service: whatever queues behind the first batches expires in-queue
+    m = ex.serve(S.make_arrivals(ex, rate_rps=1e9, deadline_s=2e-5))
+    if not m.count("deadline_misses_dequeue"):
+        pytest.skip("scenario produced no queue-side drops")
+    dropped = [s for s in ex.metrics.tracer.store.by_name("request")
+               if s.attrs["status"] == "dropped_expired"]
+    assert len(dropped) == m.count("deadline_misses_dequeue")
+    assert all(s.end_s is not None for s in dropped)
+
+
+def test_fleet_preempt_and_refill_emit_trace_marks():
+    from tests.test_fleet import (MEM_MULTI_ROUND, _prog_a, _prog_mv,
+                                  MV_CONSTS, _stream)
+    fleet = FleetScheduler(
+        S.PARAMS, MEM_MULTI_ROUND, n_devices=1, backend="analytic",
+        policy=BatchPolicy(slots_per_ct=S.PARAMS.slots, max_batch=4,
+                           max_wait_s=2e-3),
+        pass_config=PassConfig(start_level=S.START),
+        continuous_batching=True, preempt=True)
+    fleet.register("a", _prog_a, 2, const_names=("c1",), start_level=S.START)
+    fleet.register("mv", _prog_mv, 1, const_names=MV_CONSTS,
+                   start_level=S.START)
+    fleet.warmup()
+    fleet.metrics.tracer = Tracer()
+    m = fleet.serve(_stream(n=60, rate=2000.0, deadline=0.004,
+                            workloads=("a", "mv"), best_effort_every=3))
+    store = fleet.metrics.tracer.store
+    if m.count("continuous_refills"):
+        assert store.by_name("batch_join"), \
+            "refills happened but no batch_join instants traced"
+    if m.count("preemptions"):
+        marks = store.by_name("preempt")
+        assert len(marks) == m.count("requests_preempted")
+        assert all(mk.attrs["device"] == 0 for mk in marks)
+    assert not store.open_spans()
+
+
+# ---------------------------------------------------------------------------
+# export + analyzers
+# ---------------------------------------------------------------------------
+
+def test_perfetto_export_validates(store, tmp_path):
+    assert validate(to_trace_events(store, clock="virtual")) == []
+    path = tmp_path / "trace.json"
+    write_trace(store, str(path), clock="virtual")
+    data = json.load(open(path))
+    assert validate(data) == []
+    # one thread_name metadata event per device and per tenant track
+    threads = [e for e in data["traceEvents"]
+               if e["ph"] == "M" and e["name"] == "thread_name"]
+    assert len(threads) >= 4     # 3 tenant tracks + 1 device track
+
+
+def test_critical_path_telescopes(store):
+    roots = [s for s in store.by_name("request")
+             if s.attrs["status"] == "completed"]
+    root = max(roots, key=lambda s: s.duration_s)
+    segs = critical_path(store, root.request_id, k=100)
+    assert segs
+    total = sum(sg.contribution_s for sg in segs)
+    assert total <= root.duration_s + 1e-12
+    assert total >= 0.99 * root.duration_s, (
+        "critical-path contributions must telescope to ~the root "
+        f"duration: {total} vs {root.duration_s}")
+    chain = request_chain(store, root.request_id)
+    assert chain[0].name == "request"
+
+
+def test_workload_breakdown_accounts_latency(store, traced):
+    bd = workload_breakdown(store)
+    assert set(bd) == set(traced[0].workloads)
+    for name, r in bd.items():
+        parts = r["queue_s"] + r["load_s"] + r["compute_s"] + \
+            r["move_s"] + r["other_s"]
+        assert parts == pytest.approx(r["latency_s"], rel=1e-9), name
+        assert r["n"] > 0
+
+
+# ---------------------------------------------------------------------------
+# JSON event log
+# ---------------------------------------------------------------------------
+
+def test_event_log_lines_are_schema_complete(traced):
+    ex, m = traced
+    lines = ex.metrics.event_log.stream.getvalue().splitlines()
+    assert len(lines) == ex.metrics.event_log.n_events
+    evs = [json.loads(ln) for ln in lines]
+    kinds = {e["event"] for e in evs}
+    assert {"accepted", "completed"} <= kinds
+    for e in evs:
+        assert set(e) >= {"ts", "event", "request_id", "tenant",
+                          "workload"}
+    n_done = sum(e["event"] == "completed" for e in evs)
+    assert n_done == m.count("requests_completed")
+    # deadline-carrying completions expose their slack
+    assert any("deadline_slack_s" in e for e in evs
+               if e["event"] == "completed")
+
+
+# ---------------------------------------------------------------------------
+# LatencyStats bounded reservoir
+# ---------------------------------------------------------------------------
+
+def _fill(stats, n, seed=5):
+    import random
+    rng = random.Random(seed)
+    vals = [rng.expovariate(100.0) for _ in range(n)]
+    for v in vals:
+        stats.observe(v)
+    return vals
+
+
+def test_reservoir_below_threshold_is_exact():
+    a, b = LatencyStats("x"), LatencyStats("x", reservoir=1000)
+    vals = _fill(a, 500)
+    for v in vals:
+        b.observe(v)
+    for p in (50, 95, 99):
+        assert a.percentile(p) == b.percentile(p)
+    assert a.mean == b.mean and a.max == b.max and a.count == b.count
+
+
+def test_reservoir_bounds_memory_keeps_exact_aggregates():
+    st = LatencyStats("y", reservoir=64)
+    vals = _fill(st, 5000)
+    assert len(st._samples) == 64
+    assert st.count == 5000
+    assert st.max == max(vals)
+    assert st.mean == pytest.approx(sum(vals) / len(vals))
+    # percentiles are estimates but must live inside the sample range
+    assert min(vals) <= st.p99 <= max(vals)
+
+
+def test_reservoir_is_deterministic_per_name():
+    a, b = LatencyStats("z", reservoir=32), LatencyStats("z", reservoir=32)
+    _fill(a, 2000, seed=9), _fill(b, 2000, seed=9)
+    assert a._samples == b._samples
+    c = LatencyStats("other-name", reservoir=32)
+    _fill(c, 2000, seed=9)
+    assert c._samples != a._samples   # name-seeded, not shared state
+
+
+def test_registry_threads_reservoir_everywhere():
+    m = MetricsRegistry(latency_reservoir=128)
+    for st in (m.request_latency, m.queue_delay, m.service_time,
+               m.batch_service):
+        assert st.reservoir == 128
+    assert MetricsRegistry().request_latency.reservoir is None
