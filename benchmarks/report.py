@@ -102,13 +102,14 @@ def fig18_table():
           "meas/(pred*fit) |")
     print("|---|---|---|---|---|---|")
     for r in recs:
-        if r["stage"] == "total":
+        if not isinstance(r["stage"], int):
             continue
         mark = " (bootstrap)" if r.get("bootstrap") else ""
         print(f"| {r['workload']} | {r['stage']}{mark} | {r['n_ops']} | "
               f"{r['predicted_s'] * 1e3:.3f} | {r['measured_s'] * 1e3:.3f} | "
               f"{r['ratio_vs_fit']:.2f} |")
-    totals = [r for r in recs if r["stage"] == "total"]
+    totals = [r for r in recs
+              if r["stage"] == "total" and "fitted_scale" in r]
     if totals:
         print("\n| workload | fitted scale | rank concordance | "
               "max decrypt err | tolerance |")
@@ -117,6 +118,39 @@ def fig18_table():
             print(f"| {r['workload']} | {r['fitted_scale']:.1f} | "
                   f"{r['rank_concordance']:.2f} | "
                   f"{r['max_decrypt_error']:.2e} | {r['tolerance']:.2e} |")
+    ktotals = [r for r in recs if r.get("route") == "kernels"
+               and r["stage"] == "total"]
+    if ktotals:
+        print("\n| workload (fused-kernel route) | rank concordance | "
+              "library concordance | decode bit-equal |")
+        print("|---|---|---|---|")
+        for r in ktotals:
+            print(f"| {r['workload']} | {r['rank_concordance']:.2f} | "
+                  f"{r['library_rank_concordance']:.2f} | "
+                  f"{r['bit_equal']} |")
+    summ = [r for r in recs if r["stage"] == "concordance_summary"]
+    for r in summ:
+        print(f"\nKernel-route concordance (tie-tolerant mean): "
+              f"{r['kernels_mean']:.2f} vs library {r['library_mean']:.2f} "
+              f"— asserted no worse at benchmark time.")
+
+
+def fig14_table():
+    path = os.path.join(RESULTS, "fig14_kernels.jsonl")
+    if not os.path.exists(path):
+        return
+    recs = [json.loads(line) for line in open(path)]
+    print("\n### Fig. 14 — compute-path comparison (NTT / modmul / "
+          "keyswitch kernels)\n")
+    print("| path | us/call | notes |")
+    print("|---|---|---|")
+    for r in recs:
+        print(f"| {r['name']} | {r['us_per_call']:.1f} | {r['derived']} |")
+    red = [r for r in recs if "reduction" in r]
+    for r in red:
+        print(f"\nFused keyswitch dispatch reduction: "
+              f"{r['staged_dispatches']} -> {r['fused_dispatches']} "
+              f"launches ({r['reduction']:.2f}x, asserted >= 4x).")
 
 
 def fig19_table():
@@ -239,6 +273,8 @@ if __name__ == "__main__":
         dryrun_table()
     if what in ("all", "roofline"):
         roofline_table()
+    if what in ("all", "fig14"):
+        fig14_table()
     if what in ("all", "fig17"):
         fig17_table()
     if what in ("all", "fig18"):

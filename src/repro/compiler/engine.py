@@ -144,7 +144,8 @@ class CkksEngine:
     def __init__(self, params: CkksParams, seed: int = 7,
                  const_cache: Optional[Callable] = None,
                  on_key_load: Optional[Callable[[Tuple, int], None]] = None,
-                 use_kernel_modmul: bool = False):
+                 use_kernel_modmul: bool = False,
+                 use_kernels: bool = False):
         self.params = params
         self.ctx = CkksContext(params)
         self.encoder = CkksEncoder(self.ctx)
@@ -156,7 +157,14 @@ class CkksEngine:
         self._opfns: Dict[Tuple, Callable] = {}
         self.const_cache = const_cache or _default_cache_factory()
         self.on_key_load = on_key_load
-        self.use_kernel_modmul = use_kernel_modmul
+        # `use_kernels` routes every keyswitch (_hmul/_galois) through the
+        # fused Pallas pipeline (kernels/keyswitch.py) AND the pmul data
+        # product through the modmul kernel; `use_kernel_modmul` is the
+        # narrower pre-existing switch (pmul only). Both are bit-exact
+        # vs the library path, so flipping them never changes decrypts.
+        self.use_kernels = use_kernels
+        self.use_kernel_modmul = use_kernel_modmul or use_kernels
+        self._fks = None
         if on_key_load is not None:
             on_key_load(("relin",), evk_bytes(params))
 
@@ -317,7 +325,59 @@ class CkksEngine:
         return CtBatch(self._opfn(key, build)(c0.data, c1.data),
                        c0.level, c0.scale)
 
+    # -- fused Pallas keyswitch route (kernels/keyswitch.py) -----------------
+
+    @property
+    def fused_ks(self):
+        """Lazily-built FusedKeySwitch shared by every evk (relin and all
+        Galois keys ride the same per-(batch, level) compiled pipeline)."""
+        if self._fks is None:
+            from repro.kernels.keyswitch import FusedKeySwitch
+            self._fks = FusedKeySwitch(self.ctx)
+        return self._fks
+
+    def _hmul_fused(self, c0: CtBatch, c1: CtBatch, lazy: bool) -> CtBatch:
+        """HMul with the relinearization keyswitch on the fused kernels:
+        jitted tensor product -> 4-kernel keyswitch of the whole d2 batch
+        -> jitted combine (+ rescale). Bit-identical to `_hmul`."""
+        lvl = min(c0.level, c1.level)
+        c0 = self._mod_switch(c0, lvl)
+        c1 = self._mod_switch(c1, lvl)
+        key = ("hmul_tensor", c0.batch, lvl)
+
+        def build_tensor():
+            q = self.ctx.q_all[: lvl + 1][:, None]
+
+            def f(d0, d1):
+                from repro.core import modarith as ma
+                b0, a0 = d0[0], d0[1]
+                b1, a1 = d1[0], d1[1]
+                t0 = ma.mulmod(b0, b1, q)
+                t1 = ma.addmod(ma.mulmod(a0, b1, q),
+                               ma.mulmod(a1, b0, q), q)
+                d2 = ma.mulmod(a0, a1, q)
+                return jnp.stack([t0, t1]), d2
+            return jax.vmap(f)
+        d01, d2 = self._opfn(key, build_tensor)(c0.data, c1.data)
+        km = self.fused_ks.ksk_mont("relin", lvl, self.rk.data)
+        e0, e1 = self.fused_ks.apply(d2, lvl, km)
+        ckey = ("hmul_combine", c0.batch, lvl)
+
+        def build_combine():
+            q = self.ctx.q_all[: lvl + 1][:, None]
+
+            def f(d, e0_, e1_):
+                from repro.core import modarith as ma
+                return jnp.stack([ma.addmod(d[0], e0_, q),
+                                  ma.addmod(d[1], e1_, q)])
+            return jax.vmap(f)
+        data = self._opfn(ckey, build_combine)(d01, e0, e1)
+        out = CtBatch(data, lvl, c0.scale * c1.scale)
+        return out if lazy else self._rescale(out)
+
     def _hmul(self, c0: CtBatch, c1: CtBatch, lazy: bool) -> CtBatch:
+        if self.use_kernels:
+            return self._hmul_fused(c0, c1, lazy)
         lvl = min(c0.level, c1.level)
         key = ("hmul", c0.batch, c0.level, c1.level, lazy)
 
@@ -396,7 +456,37 @@ class CkksEngine:
         return CtBatch(self._opfn(key, build)(cb.data, pt.data),
                        cb.level, cb.scale)
 
+    def _galois_fused(self, cb: CtBatch, elt: int) -> CtBatch:
+        """Galois automorphism with the keyswitch on the fused kernels:
+        jitted NTT-domain permutation -> 4-kernel keyswitch of the
+        rotated `a` batch -> jitted combine. Bit-identical to `_galois`."""
+        gk = self._gk(elt)
+        lvl = cb.level
+        perm = self.ctx.eval_perm(elt)
+        key = ("galois_rot", cb.batch, lvl, elt)
+
+        def build_rot():
+            def f(d):
+                return d[:, :, perm]
+            return jax.vmap(f)
+        rot = self._opfn(key, build_rot)(cb.data)       # (B, 2, L, N)
+        km = self.fused_ks.ksk_mont(("gk", elt), lvl, gk.data)
+        e0, e1 = self.fused_ks.apply(rot[:, 1], lvl, km)
+        ckey = ("galois_combine", cb.batch, lvl)
+
+        def build_combine():
+            q = self.ctx.q_all[: lvl + 1][:, None]
+
+            def f(b_rot, e0_, e1_):
+                from repro.core import modarith as ma
+                return jnp.stack([ma.addmod(b_rot, e0_, q), e1_])
+            return jax.vmap(f)
+        data = self._opfn(ckey, build_combine)(rot[:, 0], e0, e1)
+        return CtBatch(data, lvl, cb.scale)
+
     def _galois(self, cb: CtBatch, elt: int) -> CtBatch:
+        if self.use_kernels:
+            return self._galois_fused(cb, elt)
         gk = self._gk(elt)
         key = ("galois", cb.batch, cb.level, elt)
 

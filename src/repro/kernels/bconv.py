@@ -71,7 +71,13 @@ def bconv_pallas(v, w_mont, p, pinv_neg, *, block_n: int = 512,
     s, n = v.shape
     d = w_mont.shape[0]
     block_n = min(block_n, n)
-    grid = (d, n // block_n)
+    # zero-pad the coefficient axis: `n // block_n` grids silently drop
+    # the tail block on non-divisible shapes (zero columns are inert)
+    pad = (-n) % block_n
+    if pad:
+        v = jnp.pad(v, ((0, 0), (0, pad)))
+    n_pad = n + pad
+    grid = (d, n_pad // block_n)
     kern = _bconv_kernel_lazy if lazy else _bconv_kernel
     return pl.pallas_call(
         kern,
@@ -81,6 +87,6 @@ def bconv_pallas(v, w_mont, p, pinv_neg, *, block_n: int = 512,
                   pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
                   pl.BlockSpec((1, 1), lambda i, j: (i, 0))],
         out_specs=pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((d, n), U32),
+        out_shape=jax.ShapeDtypeStruct((d, n_pad), U32),
         interpret=interpret,
-    )(v, w_mont, p[:, None], pinv_neg[:, None])
+    )(v, w_mont, p[:, None], pinv_neg[:, None])[:, :n]

@@ -15,6 +15,34 @@ import jax.numpy as jnp
 U32 = jnp.uint32
 MASK16 = 0xFFFF  # python int: avoids captured-constant arrays in Pallas kernels
 
+# ---------------------------------------------------------------------------
+# dispatch accounting
+# ---------------------------------------------------------------------------
+# Every host-side kernel launch (one `pl.pallas_call` invocation, or one
+# jitted library dispatch standing in for a kernel on the staged route)
+# records itself here. This is the currency of the fig14 fused-vs-staged
+# comparison: HE-PIM/MemFHE-style dispatch-granularity overhead is about
+# how many times the host touches the device per keyswitch, so we count
+# launches at the Python wrapper layer — code already captured inside an
+# enclosing jit trace records at trace time only, which is exactly the
+# steady-state launch count.
+
+_dispatch_count = 0
+
+
+def record_dispatch(n: int = 1) -> None:
+    global _dispatch_count
+    _dispatch_count += n
+
+
+def dispatch_count() -> int:
+    return _dispatch_count
+
+
+def reset_dispatch_count() -> None:
+    global _dispatch_count
+    _dispatch_count = 0
+
 
 def mul32_wide(a, b):
     """Full 64-bit product of u32 inputs as (hi32, lo32), u32-only ops."""

@@ -1,0 +1,504 @@
+"""Fused Pallas kernels for the CKKS key-switch pipeline.
+
+The hot loop of every homomorphic rotation and multiply is generalized
+dnum key switching (core/ops.py::key_switch): per digit, ModUp =
+iNTT -> BConv -> NTT, then the evk inner product, then ModDown. Run
+stage-by-stage that is 7·dnum + 10 host dispatches per keyswitch (see
+``keyswitch_staged``) — exactly the dispatch-granularity overhead
+HE-PIM/MemFHE identify as the dominant cost of real PIM FHE. This
+module collapses the whole pipeline into FOUR ``pl.pallas_call``
+launches, independent of digit count, limb count, and batch size:
+
+  A  ``_intt_scale_kernel``   grid (B, L):     fused inverse NTT with
+     the n^{-1}·qhat^{-1} scale folded into one Montgomery multiply —
+     the ModUp front half for every digit at once (digits partition the
+     Q limbs, so "all digit limbs" is just "all limbs").
+  B  ``_bconv_ntt_mulacc_kernel``  grid (B, T, digits): per target limb,
+     BConv accumulation, forward NTT stages fused with their twiddle
+     multiplies, and the evk multiply-accumulate for BOTH key
+     components — with the DIGIT LOOP ON-CHIP: the digit grid axis is
+     innermost, so the accumulator block stays resident in VMEM across
+     digits (revisiting), never round-tripping to HBM.
+  C1 ``_intt_scale_kernel``   grid (2B, n_p): ModDown inverse NTT of
+     the special limbs of both accumulators (components folded into
+     the batch axis).
+  C2 ``_moddown_kernel``      grid (2B, L):   BConv P->Q fused with the
+     forward NTT, the subtraction, and the P^{-1} multiply.
+
+The digit-limb "copy" of the reference ModUp needs no special case: for
+a target limb inside the source digit, every cross term of the BConv
+sum vanishes (qhat_j ≡ 0 mod q_i for j ≠ i) and the diagonal term
+reproduces a_i exactly, so the uniform BConv+NTT path is bit-identical
+to the reference interleave. All arithmetic is the u32 Montgomery layer
+of kernels/common.py (word32 RNS, moduli < 2^31), so results are
+bit-for-bit equal to the u64 library path — decrypt-equality of the
+fused engine route is exact, not approximate. Tested in
+tests/test_keyswitch_fused.py; dispatch counts are golden-snapshotted
+and compared in benchmarks/fig14_kernels.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (addmod32, mont_mul32, record_dispatch,
+                                  submod32)
+
+U32 = jnp.uint32
+U64 = jnp.uint64
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# in-kernel NTT stage helpers (last-axis butterflies, Montgomery twiddles)
+# ---------------------------------------------------------------------------
+
+def _ct_stages_last(x, rp_m, q, qi):
+    """Harvey CT butterflies along the last axis of x (rows, n);
+    rp_m (n,) Montgomery-form twiddles in core/ntt.py bitrev layout."""
+    rows, n = x.shape
+    m = 1
+    while m < n:
+        t = n // (2 * m)
+        xr = x.reshape(rows, m, 2 * t)
+        w = rp_m[m:2 * m]                        # (m,)
+        u = xr[:, :, :t]
+        v = mont_mul32(xr[:, :, t:], w[None, :, None], q, qi)
+        x = jnp.concatenate([addmod32(u, v, q), submod32(u, v, q)],
+                            axis=-1).reshape(rows, n)
+        m *= 2
+    return x
+
+
+def _gs_stages_last(x, irp_m, q, qi):
+    """Gentleman-Sande inverse butterflies (no n^{-1} scale — callers
+    fold it into their own final multiply)."""
+    rows, n = x.shape
+    m = n // 2
+    while m >= 1:
+        t = n // (2 * m)
+        xr = x.reshape(rows, m, 2 * t)
+        w = irp_m[m:2 * m]
+        u = xr[:, :, :t]
+        v = xr[:, :, t:]
+        s = addmod32(u, v, q)
+        d = mont_mul32(submod32(u, v, q), w[None, :, None], q, qi)
+        x = jnp.concatenate([s, d], axis=-1).reshape(rows, n)
+        m //= 2
+    return x
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _intt_scale_kernel(x_ref, irp_ref, q_ref, qi_ref, sc_ref, o_ref):
+    """One (1, 1, N) limb row: inverse NTT fused with a per-limb scale
+    (n^{-1}·qhat^{-1} — the iNTT normalization and the BConv input
+    scaling as ONE Montgomery multiply)."""
+    q = q_ref[0, 0]
+    qi = qi_ref[0, 0]
+    x = _gs_stages_last(x_ref[0], irp_ref[0], q, qi)
+    o_ref[...] = mont_mul32(x, sc_ref[0, 0], q, qi)[None]
+
+
+def _bconv_ntt_mulacc_kernel(v_ref, w_ref, rp_ref, q_ref, qi_ref,
+                             k0_ref, k1_ref, a0_ref, a1_ref):
+    """One (batch, target-limb) output row, revisited across the digit
+    grid axis: BConv over the digit's (padded) source rows, forward NTT
+    stages fused with their twiddle multiplies, then the evk
+    multiply-accumulate for both key components. Padded source rows
+    carry w = 0 so they contribute nothing."""
+    q = q_ref[0, 0]
+    qi = qi_ref[0, 0]
+    jmax = v_ref.shape[2]
+    n = v_ref.shape[3]
+    acc = jnp.zeros((1, n), U32)
+    for j in range(jmax):                       # adder tree, depth-1
+        prod = mont_mul32(v_ref[0, 0, j, :][None, :], w_ref[0, j, 0], q, qi)
+        acc = addmod32(acc, prod, q)
+    raised = _ct_stages_last(acc, rp_ref[0], q, qi)
+    e0 = mont_mul32(raised, k0_ref[0, 0][None, :], q, qi)
+    e1 = mont_mul32(raised, k1_ref[0, 0][None, :], q, qi)
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _():
+        a0_ref[...] = e0[None]
+        a1_ref[...] = e1[None]
+
+    @pl.when(d != 0)
+    def _():
+        a0_ref[...] = addmod32(a0_ref[...], e0[None], q)
+        a1_ref[...] = addmod32(a1_ref[...], e1[None], q)
+
+
+def _moddown_kernel(aq_ref, vp_ref, w_ref, rp_ref, q_ref, qi_ref,
+                    pinv_ref, o_ref):
+    """ModDown tail for one (batch, Q-limb) row: BConv P->Q fused with
+    the forward NTT, the subtraction from a_Q, and the P^{-1} multiply."""
+    q = q_ref[0, 0]
+    qi = qi_ref[0, 0]
+    n_p = vp_ref.shape[1]
+    n = vp_ref.shape[2]
+    acc = jnp.zeros((1, n), U32)
+    for j in range(n_p):
+        prod = mont_mul32(vp_ref[0, j, :][None, :], w_ref[j, 0], q, qi)
+        acc = addmod32(acc, prod, q)
+    conv = _ct_stages_last(acc, rp_ref[0], q, qi)
+    diff = submod32(aq_ref[0], conv, q)
+    o_ref[...] = mont_mul32(diff, pinv_ref[0, 0], q, qi)[None]
+
+
+# ---------------------------------------------------------------------------
+# host-precomputed per-level tables
+# ---------------------------------------------------------------------------
+
+def _mont_np(arr: np.ndarray, p: int) -> np.ndarray:
+    """arr -> arr·R mod p as u32 (arr, R mod p < 2^31: no u64 overflow)."""
+    rm = np.uint64((1 << 32) % p)
+    return ((arr.astype(np.uint64) * rm) % np.uint64(p)).astype(np.uint32)
+
+
+@dataclasses.dataclass
+class _LevelTables:
+    """Device tables for one (level, target basis) instance."""
+    n_digits: int
+    alpha: int                    # padded digit size
+    n_p: int
+    # stage A (Q-limb iNTT + digit-local qhat^{-1} scale)
+    q_irp_m: jnp.ndarray          # (L, N)
+    q_q32: jnp.ndarray            # (L,)
+    q_qi32: jnp.ndarray           # (L,)
+    q_scale_m: jnp.ndarray        # (L,)  n^{-1}·qhat^{-1} mont
+    # stage B (target-limb BConv + NTT + evk mulacc)
+    w_m: jnp.ndarray              # (D, alpha, T) mont w.r.t. target prime
+    rp_m: jnp.ndarray             # (T, N) forward twiddles, mont
+    t_q32: jnp.ndarray            # (T,)
+    t_qi32: jnp.ndarray           # (T,)
+    # ModDown
+    p_irp_m: jnp.ndarray          # (n_p, N)
+    p_q32: jnp.ndarray            # (n_p,)
+    p_qi32: jnp.ndarray           # (n_p,)
+    p_scale_m: jnp.ndarray        # (n_p,) n^{-1}·phat^{-1} mont
+    wpq_m: jnp.ndarray            # (n_p, L) mont w.r.t. q
+    pinv_m: jnp.ndarray           # (L,) P^{-1} mod q, mont
+
+
+class FusedKeySwitch:
+    """Executes the fused keyswitch pipeline against one CkksContext.
+
+    Tables are built host-side once per level; evaluation keys are
+    Montgomery-converted once per (key identity, level); the whole
+    4-kernel pipeline is jitted once per (batch, level) and shared by
+    every evk (relin and all Galois keys ride the same compiled fn).
+    """
+
+    DISPATCHES_PER_APPLY = 4      # pallas_call launches per keyswitch
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self._tabs: Dict[int, _LevelTables] = {}
+        self._ksk_m: Dict[Tuple, jnp.ndarray] = {}
+        self._fns: Dict[Tuple, callable] = {}
+
+    # -- tables --------------------------------------------------------------
+
+    def _tables(self, level: int) -> _LevelTables:
+        t = self._tabs.get(level)
+        if t is not None:
+            return t
+        ctx = self.ctx
+        l = level + 1
+        n_p = ctx.n_p
+        digits = ctx.params.digit_indices(level)
+        d_n = len(digits)
+        alpha = ctx.params.alpha
+        target = list(range(l)) + ctx.p_idx()
+        t_primes = [ctx.primes[i] for i in target]
+        t_n = len(target)
+
+        rp = np.asarray(ctx.tables.root_powers)
+        irp = np.asarray(ctx.tables.inv_root_powers)
+        n_inv = np.asarray(ctx.tables.n_inv)
+
+        def qinv32(p: int) -> np.uint32:
+            return np.uint32((-pow(p, -1, 1 << 32)) % (1 << 32))
+
+        # stage A: per-Q-limb inverse twiddles + fused n^{-1}·qhat^{-1}
+        q_irp_m = np.stack([_mont_np(irp[j], ctx.primes[j])
+                            for j in range(l)])
+        q_scale = np.zeros(l, dtype=np.uint32)
+        for dig in digits:
+            big_qd = 1
+            for j in dig:
+                big_qd *= ctx.primes[j]
+            for j in dig:
+                qj = ctx.primes[j]
+                qhat_inv = pow((big_qd // qj) % qj, -1, qj)
+                sc = int(n_inv[j]) * qhat_inv % qj
+                q_scale[j] = _mont_np(np.array([sc], dtype=np.uint64), qj)[0]
+
+        # stage B: BConv weights per (digit, src, target) + fwd twiddles
+        w = np.zeros((d_n, alpha, t_n), dtype=np.uint32)
+        for d, dig in enumerate(digits):
+            big_qd = 1
+            for j in dig:
+                big_qd *= ctx.primes[j]
+            for jl, j in enumerate(dig):
+                qhat = big_qd // ctx.primes[j]
+                for ti, p in enumerate(t_primes):
+                    w[d, jl, ti] = _mont_np(
+                        np.array([qhat % p], dtype=np.uint64), p)[0]
+        rp_m = np.stack([_mont_np(rp[g], ctx.primes[g]) for g in target])
+
+        # ModDown: P-limb iNTT + n^{-1}·phat^{-1}, BConv P->Q, P^{-1}
+        p_glob = ctx.p_idx()
+        p_irp_m = np.stack([_mont_np(irp[g], ctx.primes[g]) for g in p_glob])
+        big_p = ctx.big_p
+        p_scale = np.zeros(n_p, dtype=np.uint32)
+        wpq = np.zeros((n_p, l), dtype=np.uint32)
+        for i, g in enumerate(p_glob):
+            p = ctx.primes[g]
+            phat = big_p // p
+            sc = int(n_inv[g]) * pow(phat % p, -1, p) % p
+            p_scale[i] = _mont_np(np.array([sc], dtype=np.uint64), p)[0]
+            for j in range(l):
+                qj = ctx.primes[j]
+                wpq[i, j] = _mont_np(np.array([phat % qj],
+                                              dtype=np.uint64), qj)[0]
+        pinv = np.asarray(ctx.p_inv_mod_q[:l])
+        pinv_m = np.array([_mont_np(pinv[j:j + 1], ctx.primes[j])[0]
+                           for j in range(l)], dtype=np.uint32)
+
+        t = _LevelTables(
+            n_digits=d_n, alpha=alpha, n_p=n_p,
+            q_irp_m=jnp.asarray(q_irp_m),
+            q_q32=jnp.asarray(np.array(ctx.primes[:l], dtype=np.uint32)),
+            q_qi32=jnp.asarray(np.array(
+                [qinv32(ctx.primes[j]) for j in range(l)], dtype=np.uint32)),
+            q_scale_m=jnp.asarray(q_scale),
+            w_m=jnp.asarray(w),
+            rp_m=jnp.asarray(rp_m),
+            t_q32=jnp.asarray(np.array(t_primes, dtype=np.uint32)),
+            t_qi32=jnp.asarray(np.array([qinv32(p) for p in t_primes],
+                                        dtype=np.uint32)),
+            p_irp_m=jnp.asarray(p_irp_m),
+            p_q32=jnp.asarray(np.array([ctx.primes[g] for g in p_glob],
+                                       dtype=np.uint32)),
+            p_qi32=jnp.asarray(np.array(
+                [qinv32(ctx.primes[g]) for g in p_glob], dtype=np.uint32)),
+            p_scale_m=jnp.asarray(p_scale),
+            wpq_m=jnp.asarray(wpq),
+            pinv_m=jnp.asarray(pinv_m),
+        )
+        self._tabs[level] = t
+        return t
+
+    def ksk_mont(self, key: Tuple, level: int,
+                 ksk_data: jnp.ndarray) -> jnp.ndarray:
+        """Target-basis slice of an evk in Montgomery form, cached per
+        (stable key identity, level): (D, 2, T, N) u32."""
+        k = (key, level)
+        m = self._ksk_m.get(k)
+        if m is not None:
+            return m
+        from repro.core import modarith as ma
+        ctx = self.ctx
+        t = self._tables(level)
+        target = np.array(list(range(level + 1)) + ctx.p_idx())
+        q_t = ctx.q_all[target][:, None]
+        rm = jnp.asarray(np.array(
+            [(1 << 32) % ctx.primes[g] for g in target], dtype=np.uint64))
+        sel = ksk_data[: t.n_digits, :, target]
+        m = ma.mulmod(sel, rm[:, None], q_t).astype(U32)
+        self._ksk_m[k] = m
+        return m
+
+    # -- pipeline ------------------------------------------------------------
+
+    def _build(self, b: int, level: int, itp: bool):
+        """The full 4-kernel pipeline for one (batch, level) signature."""
+        t = self._tables(level)
+        l = level + 1
+        n = self.ctx.n
+        d_n, alpha, n_p = t.n_digits, t.alpha, t.n_p
+        t_n = l + n_p
+
+        def run(d2, ksk_m):
+            d2 = d2.astype(U32)
+            row3 = lambda i, j: (i, j, 0)                     # noqa: E731
+            limb_row = lambda i, j: (j, 0)                    # noqa: E731
+            limb_scal = lambda i, j: (j, 0)                   # noqa: E731
+            # A: ModUp front half for every digit limb at once
+            v = pl.pallas_call(
+                _intt_scale_kernel,
+                grid=(b, l),
+                in_specs=[pl.BlockSpec((1, 1, n), row3),
+                          pl.BlockSpec((1, n), limb_row),
+                          pl.BlockSpec((1, 1), limb_scal),
+                          pl.BlockSpec((1, 1), limb_scal),
+                          pl.BlockSpec((1, 1), limb_scal)],
+                out_specs=pl.BlockSpec((1, 1, n), row3),
+                out_shape=jax.ShapeDtypeStruct((b, l, n), U32),
+                interpret=itp,
+            )(d2, t.q_irp_m, t.q_q32[:, None], t.q_qi32[:, None],
+              t.q_scale_m[:, None])
+            # digits partition the Q limbs contiguously in alpha-chunks:
+            # zero-pad the tail digit and fold the digit axis out
+            v_pad = jnp.pad(v, ((0, 0), (0, d_n * alpha - l),
+                                (0, 0))).reshape(b, d_n, alpha, n)
+            # B: on-chip digit loop (digit axis innermost -> accumulator
+            # blocks stay resident across digits)
+            acc0, acc1 = pl.pallas_call(
+                _bconv_ntt_mulacc_kernel,
+                grid=(b, t_n, d_n),
+                in_specs=[
+                    pl.BlockSpec((1, 1, alpha, n),
+                                 lambda i, j, d: (i, d, 0, 0)),
+                    pl.BlockSpec((1, alpha, 1), lambda i, j, d: (d, 0, j)),
+                    pl.BlockSpec((1, n), lambda i, j, d: (j, 0)),
+                    pl.BlockSpec((1, 1), lambda i, j, d: (j, 0)),
+                    pl.BlockSpec((1, 1), lambda i, j, d: (j, 0)),
+                    pl.BlockSpec((1, 1, n), lambda i, j, d: (d, j, 0)),
+                    pl.BlockSpec((1, 1, n), lambda i, j, d: (d, j, 0)),
+                ],
+                out_specs=[pl.BlockSpec((1, 1, n), lambda i, j, d: (i, j, 0)),
+                           pl.BlockSpec((1, 1, n),
+                                        lambda i, j, d: (i, j, 0))],
+                out_shape=[jax.ShapeDtypeStruct((b, t_n, n), U32),
+                           jax.ShapeDtypeStruct((b, t_n, n), U32)],
+                interpret=itp,
+            )(v_pad, t.w_m, t.rp_m, t.t_q32[:, None], t.t_qi32[:, None],
+              ksk_m[:, 0], ksk_m[:, 1])
+            # ModDown: both key components fold into the batch axis
+            g = jnp.concatenate([acc0, acc1], axis=0)         # (2b, T, n)
+            vp = pl.pallas_call(
+                _intt_scale_kernel,
+                grid=(2 * b, n_p),
+                in_specs=[pl.BlockSpec((1, 1, n), lambda i, j: (i, l + j, 0)),
+                          pl.BlockSpec((1, n), limb_row),
+                          pl.BlockSpec((1, 1), limb_scal),
+                          pl.BlockSpec((1, 1), limb_scal),
+                          pl.BlockSpec((1, 1), limb_scal)],
+                out_specs=pl.BlockSpec((1, 1, n), row3),
+                out_shape=jax.ShapeDtypeStruct((2 * b, n_p, n), U32),
+                interpret=itp,
+            )(g, t.p_irp_m, t.p_q32[:, None], t.p_qi32[:, None],
+              t.p_scale_m[:, None])
+            out = pl.pallas_call(
+                _moddown_kernel,
+                grid=(2 * b, l),
+                in_specs=[pl.BlockSpec((1, 1, n), row3),
+                          pl.BlockSpec((1, n_p, n), lambda i, j: (i, 0, 0)),
+                          pl.BlockSpec((n_p, 1), lambda i, j: (0, j)),
+                          pl.BlockSpec((1, n), limb_row),
+                          pl.BlockSpec((1, 1), limb_scal),
+                          pl.BlockSpec((1, 1), limb_scal),
+                          pl.BlockSpec((1, 1), limb_scal)],
+                out_specs=pl.BlockSpec((1, 1, n), row3),
+                out_shape=jax.ShapeDtypeStruct((2 * b, l, n), U32),
+                interpret=itp,
+            )(g, vp, t.wpq_m, t.rp_m, t.t_q32[:, None], t.t_qi32[:, None],
+              t.pinv_m[:, None])
+            return out[:b].astype(U64), out[b:].astype(U64)
+        return run
+
+    def apply(self, d2: jnp.ndarray, level: int, ksk_m: jnp.ndarray,
+              interpret=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Key-switch d2 (B, level+1, N) u64 NTT-domain to the key in
+        ksk_m (from ``ksk_mont``). Returns (e0, e1), each (B, level+1,
+        N) u64 — bit-identical to core/ops.key_switch per batch row."""
+        itp = _default_interpret() if interpret is None else interpret
+        b = d2.shape[0]
+        key = (b, level, itp)
+        fn = self._fns.get(key)
+        if fn is None:
+            # first call runs un-jitted (the pallas interpreter traces
+            # eagerly; tables must land as concrete arrays), then the
+            # jitted pipeline is cached — the steady state is ONE fused
+            # XLA program containing the 4 kernel launches
+            eager = self._build(b, level, itp)
+
+            def first(d2_, ksk_):
+                out = eager(d2_, ksk_)
+                self._fns[key] = jax.jit(eager)
+                return out
+            fn = first
+        record_dispatch(self.DISPATCHES_PER_APPLY)
+        return fn(d2, ksk_m)
+
+
+# ---------------------------------------------------------------------------
+# staged baseline: the same pipeline as one dispatch per stage
+# ---------------------------------------------------------------------------
+
+def keyswitch_staged(ctx, d2: jnp.ndarray, level: int, ksk,
+                     interpret=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch-per-stage keyswitch through the standalone kernels +
+    library NTT dispatches — bit-identical to core/ops.key_switch, used
+    as the fig14 baseline the fused pipeline is measured against. Every
+    host-side launch records itself via kernels.common.record_dispatch:
+    7 per digit (iNTT, qhat^{-1} modmul, BConv, NTT, interleave, 2×evk
+    mulacc) plus 10 for ModDown."""
+    from repro.kernels import ops as kops
+    itp = _default_interpret() if interpret is None else interpret
+    idx_q = ctx.q_idx(level)
+    idx_p = ctx.p_idx()
+    target = idx_q + idx_p
+    t_primes = [ctx.primes[i] for i in target]
+    n = ctx.n
+    digits = ctx.params.digit_indices(level)
+    acc0 = jnp.zeros((len(target), n), dtype=U64)
+    acc1 = jnp.zeros((len(target), n), dtype=U64)
+    ksk_sel = ksk.data[:, :, np.array(target)]
+    pos = {g: i for i, g in enumerate(target)}
+    for d, dig in enumerate(digits):
+        other = [i for i in target if i not in dig]
+        tabs = ctx.bconv_tables(dig, other)
+        record_dispatch()                                   # iNTT
+        dig_c = ctx.intt(d2[np.array(dig)], dig)
+        src = [ctx.primes[i] for i in dig]
+        v = kops.modmul(dig_c, jnp.broadcast_to(tabs.qhat_inv[:, None],
+                                                dig_c.shape), src,
+                        interpret=itp)
+        conv = kops.bconv(v, tabs.w, [ctx.primes[i] for i in other],
+                          interpret=itp)
+        record_dispatch()                                   # NTT
+        conv_ntt = ctx.ntt(conv, other)
+        record_dispatch()                                   # interleave
+        raised = jnp.zeros((len(target), n), dtype=U64)
+        raised = raised.at[np.array([pos[g] for g in dig])].set(
+            d2[np.array(dig)])
+        raised = raised.at[np.array([pos[g] for g in other])].set(conv_ntt)
+        acc0 = kops.mulacc(raised, ksk_sel[d, 0], acc0, t_primes,
+                           interpret=itp)
+        acc1 = kops.mulacc(raised, ksk_sel[d, 1], acc1, t_primes,
+                           interpret=itp)
+    nq = len(idx_q)
+    q = ctx.q_all[:nq][:, None]
+    tabs = ctx.bconv_tables(idx_p, idx_q)
+    outs = []
+    for acc in (acc0, acc1):
+        record_dispatch()                                   # iNTT (P)
+        p_c = ctx.intt(acc[nq:], idx_p)
+        v = kops.modmul(p_c, jnp.broadcast_to(tabs.qhat_inv[:, None],
+                                              p_c.shape),
+                        [ctx.primes[i] for i in idx_p], interpret=itp)
+        conv = kops.bconv(v, tabs.w, [ctx.primes[i] for i in idx_q],
+                          interpret=itp)
+        record_dispatch()                                   # NTT
+        conv_ntt = ctx.ntt(conv, idx_q)
+        record_dispatch()                                   # sub + P^{-1}
+        from repro.core import modarith as ma
+        diff = ma.submod(acc[:nq], conv_ntt, q)
+        outs.append(ma.mulmod(diff, ctx.p_inv_mod_q[:nq][:, None], q))
+    return outs[0], outs[1]

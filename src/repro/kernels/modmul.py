@@ -21,6 +21,20 @@ from repro.kernels.common import addmod32, mont_mul32
 U32 = jnp.uint32
 
 
+def _pad_cols(arrs, n: int, block_n: int):
+    """Zero-pad the last axis up to a multiple of block_n.
+
+    `grid = (l, n // block_n)` silently DROPS the tail block when
+    n % block_n != 0 (the trailing coefficients come back as zeros) —
+    regression-tested in tests/test_kernels.py. Zero columns are inert
+    for every kernel here (mont_mul32(0, b) == 0), so pad + slice is
+    exact."""
+    pad = (-n) % block_n
+    if pad == 0:
+        return arrs, n
+    return [jnp.pad(a, ((0, 0), (0, pad))) for a in arrs], n + pad
+
+
 def _modmul_kernel(a_ref, b_ref, q_ref, qinv_ref, o_ref):
     q = q_ref[0, 0]
     qi = qinv_ref[0, 0]
@@ -39,7 +53,8 @@ def modmul_pallas(a, b_mont, q, qinv_neg, *, block_n: int = 512,
     """a, b_mont: (L, N) u32; q, qinv_neg: (L,) u32. Returns (a*b) mod q."""
     l, n = a.shape
     block_n = min(block_n, n)
-    grid = (l, n // block_n)
+    (a, b_mont), n_pad = _pad_cols([a, b_mont], n, block_n)
+    grid = (l, n_pad // block_n)
     row = pl.BlockSpec((1, block_n), lambda i, j: (i, j))
     scal = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
     return pl.pallas_call(
@@ -47,9 +62,9 @@ def modmul_pallas(a, b_mont, q, qinv_neg, *, block_n: int = 512,
         grid=grid,
         in_specs=[row, row, scal, scal],
         out_specs=row,
-        out_shape=jax.ShapeDtypeStruct((l, n), U32),
+        out_shape=jax.ShapeDtypeStruct((l, n_pad), U32),
         interpret=interpret,
-    )(a, b_mont, q[:, None], qinv_neg[:, None])
+    )(a, b_mont, q[:, None], qinv_neg[:, None])[:, :n]
 
 
 def mulacc_pallas(a, b_mont, c, q, qinv_neg, *, block_n: int = 512,
@@ -57,7 +72,8 @@ def mulacc_pallas(a, b_mont, c, q, qinv_neg, *, block_n: int = 512,
     """(a*b + c) mod q — fused NMU multiply-accumulate."""
     l, n = a.shape
     block_n = min(block_n, n)
-    grid = (l, n // block_n)
+    (a, b_mont, c), n_pad = _pad_cols([a, b_mont, c], n, block_n)
+    grid = (l, n_pad // block_n)
     row = pl.BlockSpec((1, block_n), lambda i, j: (i, j))
     scal = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
     return pl.pallas_call(
@@ -65,6 +81,6 @@ def mulacc_pallas(a, b_mont, c, q, qinv_neg, *, block_n: int = 512,
         grid=grid,
         in_specs=[row, row, row, scal, scal],
         out_specs=row,
-        out_shape=jax.ShapeDtypeStruct((l, n), U32),
+        out_shape=jax.ShapeDtypeStruct((l, n_pad), U32),
         interpret=interpret,
-    )(a, b_mont, c, q[:, None], qinv_neg[:, None])
+    )(a, b_mont, c, q[:, None], qinv_neg[:, None])[:, :n]

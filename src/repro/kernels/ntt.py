@@ -95,6 +95,13 @@ def ntt_four_step_pallas(a, kt: FourStepKernelTables, *,
     x = a.reshape(r, c)
     block_c = min(block_c, c)
     block_r = min(block_r, r)
+    # `dim // block` grids silently drop the tail tile on non-divisible
+    # blocks (trailing outputs would come back as zeros). r and c are
+    # powers of two, so any power-of-two block divides — reject the rest.
+    if c % block_c or r % block_r:
+        raise ValueError(
+            f"four-step NTT blocks must divide the (R, C)=({r}, {c}) tile "
+            f"grid; got block_r={block_r}, block_c={block_c}")
     # phase 1: columns
     y = pl.pallas_call(
         _ntt_col_kernel,

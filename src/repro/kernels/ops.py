@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core import modarith as ma
 from repro.kernels import bconv as bconv_k
 from repro.kernels import modmul as modmul_k
+from repro.kernels.common import record_dispatch
 from repro.kernels.ntt import FourStepKernelTables, ntt_four_step_pallas
 from repro.kernels.ref import FourStepTables
 
@@ -47,6 +48,7 @@ def modmul(a, b, primes: Sequence[int], interpret=None):
     q32, qinv, rm = _mont_consts(primes)
     q64 = jnp.asarray(np.array(primes, dtype=np.uint64))
     itp = _default_interpret() if interpret is None else interpret
+    record_dispatch()
     return _modmul_impl(a, b, q64, q32, qinv, rm, interpret=itp)
 
 
@@ -63,24 +65,31 @@ def mulacc(a, b, c, primes: Sequence[int], interpret=None):
     q32, qinv, rm = _mont_consts(primes)
     q64 = jnp.asarray(np.array(primes, dtype=np.uint64))
     itp = _default_interpret() if interpret is None else interpret
+    record_dispatch()
     return _mulacc_impl(a, b, c, q64, q32, qinv, rm, interpret=itp)
+
+
+@partial(jax.jit, static_argnames=("lazy", "interpret"))
+def _bconv_impl(v, wt, p64, p32, pinv, rm, lazy=False, interpret=True):
+    # w -> Montgomery form w.r.t. each dst prime INSIDE the jit: the
+    # conversion fuses into the compiled program instead of paying an
+    # eager host-side dispatch (and a retrace) on every call.
+    w_mont = ma.mulmod(wt % p64[:, None], rm[:, None],
+                       p64[:, None]).astype(jnp.uint32)
+    return bconv_k.bconv_pallas(v.astype(jnp.uint32), w_mont, p32, pinv,
+                                lazy=lazy,
+                                interpret=interpret).astype(jnp.uint64)
 
 
 def bconv(v, w, dst_primes: Sequence[int], lazy: bool = False,
           interpret=None):
     """out[d] = sum_j v[j]*w[j,d] mod p_d. v: (S,N) u64; w: (S,D) u64."""
-    p32, pinv, _ = _mont_consts(dst_primes)
+    p32, pinv, rm64 = _mont_consts(dst_primes)
     itp = _default_interpret() if interpret is None else interpret
-    # w -> Montgomery form w.r.t. each dst prime; layout (D, S)
-    wt = w.T  # (D, S)
     p64 = jnp.asarray(np.array(dst_primes, dtype=np.uint64))
-    rm = jnp.asarray(np.array([(1 << 32) % int(p) for p in dst_primes],
-                              dtype=np.uint64))
-    w_mont = ma.mulmod(wt % p64[:, None], rm[:, None],
-                       p64[:, None]).astype(jnp.uint32)
-    return bconv_k.bconv_pallas(v.astype(jnp.uint32), w_mont, p32, pinv,
-                                lazy=lazy,
-                                interpret=itp).astype(jnp.uint64)
+    record_dispatch()
+    return _bconv_impl(v, w.T, p64, p32, pinv, rm64, lazy=lazy,
+                       interpret=itp)
 
 
 class NttKernel:
@@ -92,6 +101,7 @@ class NttKernel:
 
     def __call__(self, a, interpret=None, **blocks):
         itp = _default_interpret() if interpret is None else interpret
+        record_dispatch(2)          # column kernel + fused row kernel
         return ntt_four_step_pallas(a.astype(jnp.uint32), self.kt,
                                     interpret=itp,
                                     **blocks).astype(jnp.uint64)

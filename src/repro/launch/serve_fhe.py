@@ -66,12 +66,16 @@ WORKLOADS = {
 def build_executor(params: CkksParams, mem: MemoryModel, *,
                    backend_name: str, max_batch: int, max_wait_s: float,
                    cache_bytes: int, start_level: int,
-                   opt: bool = True) -> PipelinedExecutor:
+                   opt: bool = True,
+                   use_kernels: bool = None) -> PipelinedExecutor:
+    from repro.runtime.executor import resolve_backend
     policy = BatchPolicy(slots_per_ct=params.slots, max_batch=max_batch,
                          max_wait_s=max_wait_s)
     key_cache = (KeyCache(cache_bytes, load_bw=mem.load_bw)
                  if cache_bytes > 0 else None)
-    ex = PipelinedExecutor(params, mem, backend=backend_name, policy=policy,
+    backend = resolve_backend(backend_name, params, mem,
+                              use_kernels=use_kernels)
+    ex = PipelinedExecutor(params, mem, backend=backend, policy=policy,
                            key_cache=key_cache,
                            pass_config=PassConfig() if opt else None)
     for name, (fn, n_in, consts) in WORKLOADS.items():
@@ -90,14 +94,19 @@ def build_fleet_scheduler(params: CkksParams, mem: MemoryModel, *,
                           max_batch: int, max_wait_s: float,
                           cache_bytes: int, start_level: int,
                           opt: bool = True, continuous_batching: bool = False,
-                          preempt: bool = False):
+                          preempt: bool = False, use_kernels: bool = None):
     """Fleet-mode mirror of build_executor: N devices (each with its own
     backend instance and caches), one router, one scheduler."""
     from repro.fleet import FleetScheduler
+    from repro.runtime.executor import resolve_backend
     policy = BatchPolicy(slots_per_ct=params.slots, max_batch=max_batch,
                          max_wait_s=max_wait_s)
+
+    def backend_factory():
+        return resolve_backend(backend_name, params, mem,
+                               use_kernels=use_kernels)
     fleet = FleetScheduler(
-        params, mem, n_devices=n_devices, backend=backend_name,
+        params, mem, n_devices=n_devices, backend=backend_factory,
         router=router, policy=policy, cache_bytes=cache_bytes,
         pass_config=PassConfig() if opt else None,
         continuous_batching=continuous_batching, preempt=preempt)
@@ -205,6 +214,13 @@ def main() -> None:
                     help="key cache capacity; 0 disables the cache")
     ap.add_argument("--no-encrypt", action="store_true",
                     help="skip real CKKS payload encryption at ingest")
+    ap.add_argument("--use-kernels", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="(--backend ciphertext) route keyswitch + modmul "
+                         "through the fused Pallas kernels "
+                         "(repro.kernels.keyswitch; bit-exact vs the "
+                         "library path, compiled on TPU / interpret mode "
+                         "on CPU); default: on iff running on TPU")
     ap.add_argument("--opt", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="run the optimizing trace compiler "
@@ -268,13 +284,14 @@ def main() -> None:
             cache_bytes=args.cache_mb * 2 ** 20,
             start_level=start_level, opt=args.opt,
             continuous_batching=args.continuous_batching,
-            preempt=args.preempt)
+            preempt=args.preempt, use_kernels=args.use_kernels)
     else:
         ex = build_executor(params, mem, backend_name=args.backend,
                             max_batch=args.max_batch,
                             max_wait_s=args.max_wait_ms * 1e-3,
                             cache_bytes=args.cache_mb * 2 ** 20,
-                            start_level=start_level, opt=args.opt)
+                            start_level=start_level, opt=args.opt,
+                            use_kernels=args.use_kernels)
     arrivals = synth_arrivals(
         ex, n_tenants=args.tenants, n_requests=args.requests,
         rate_rps=args.rate, seed=args.seed,

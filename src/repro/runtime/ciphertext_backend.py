@@ -99,9 +99,11 @@ class CiphertextBackend:
                  const_amplitude: float = 0.25):
         import jax
         if use_kernels is None:
-            # the Pallas modmul route compiles natively on TPU; interpret
-            # mode elsewhere is correct but slower than the library path
+            # the Pallas kernel route (fused keyswitch + modmul) compiles
+            # natively on TPU; interpret mode elsewhere is correct but
+            # slower than the library path
             use_kernels = jax.default_backend() == "tpu"
+        self.use_kernels = bool(use_kernels)
         self._key_cache: Optional[KeyCache] = None
         self._local_consts: Dict = {}
         self._consts_memo: Dict[Tuple, Dict[str, np.ndarray]] = {}
@@ -110,7 +112,7 @@ class CiphertextBackend:
         self.engine = CkksEngine(params, seed=seed,
                                  const_cache=self._cached_const,
                                  on_key_load=self._on_key_load,
-                                 use_kernel_modmul=use_kernels)
+                                 use_kernels=use_kernels)
         # workload -> per-stage running means of measured seconds
         self.stage_stats: Dict[str, List[_StageStat]] = {}
         self.pad_batch_to: Optional[int] = None   # bucketing (executor sets)

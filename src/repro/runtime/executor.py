@@ -309,21 +309,26 @@ def record_request_completion(metrics: MetricsRegistry, r: Request,
 BACKEND_NAMES = ("analytic", "mesh", "ciphertext", "pim")
 
 
-def resolve_backend(name: str, params: CkksParams, mem: MemoryModel):
+def resolve_backend(name: str, params: CkksParams, mem: MemoryModel,
+                    use_kernels: Optional[bool] = None):
     """Build a backend from its CLI/ctor name: ``analytic`` (cost model),
     ``mesh`` (distributed placeholder stages), ``ciphertext`` (real
     encrypted execution via repro.compiler.engine), ``pim``
     (discrete-event simulation of the hierarchical FHEmem hardware
     model, repro.pim — the arch is recovered from `mem`: a preset
     projection maps back to its preset, anything else is wrapped in a
-    degenerate arch billing exactly like AnalyticBackend)."""
+    degenerate arch billing exactly like AnalyticBackend).
+
+    ``use_kernels`` (ciphertext backend only) routes keyswitch + modmul
+    through the fused Pallas kernels; None keeps the backend's own
+    default (on iff running on TPU)."""
     if name == "analytic":
         return AnalyticBackend(mem)
     if name == "mesh":
         return MeshBackend(slots_per_ct=params.slots)
     if name == "ciphertext":
         from repro.runtime.ciphertext_backend import CiphertextBackend
-        return CiphertextBackend(params)
+        return CiphertextBackend(params, use_kernels=use_kernels)
     if name == "pim":
         from repro.pim.backend import resolve_pim_backend
         return resolve_pim_backend(mem)

@@ -135,3 +135,66 @@ def test_ntt_kernel_block_shape_sweep(rng, block_c, block_r):
                           block_c=block_c, block_r=block_r))
     want = np.asarray(ref.four_step_ntt_ref(jnp.asarray(a), kern.tabs))
     np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# ragged shapes — regression for the silent tail-truncation bug where
+# `grid = (l, n // block_n)` dropped the last partial block (trailing
+# coefficients came back as zeros instead of products)
+# ---------------------------------------------------------------------------
+
+RAGGED_N = 600  # > default block_n=512 and not a multiple of it
+
+
+def test_modmul_kernel_ragged_tail(rng):
+    primes = PRIMES[:2]
+    qs = np.array(primes, dtype=np.uint64)
+    a = rng.integers(0, 2**31, size=(2, RAGGED_N), dtype=np.uint64) % qs[:, None]
+    b = rng.integers(0, 2**31, size=(2, RAGGED_N), dtype=np.uint64) % qs[:, None]
+    got = ops.modmul(jnp.asarray(a), jnp.asarray(b), primes, interpret=True)
+    want = ref.modmul_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(qs))
+    assert got.shape == (2, RAGGED_N)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mulacc_kernel_ragged_tail(rng):
+    primes = PRIMES[:2]
+    qs = np.array(primes, dtype=np.uint64)
+    a, b, c = (rng.integers(0, 2**31, size=(2, RAGGED_N), dtype=np.uint64)
+               % qs[:, None] for _ in range(3))
+    got = ops.mulacc(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), primes,
+                     interpret=True)
+    want = ref.fused_mulacc_ref(jnp.asarray(a), jnp.asarray(b),
+                                jnp.asarray(c), jnp.asarray(qs))
+    assert got.shape == (2, RAGGED_N)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("lazy", [False, True])
+def test_bconv_kernel_ragged_tail(rng, lazy):
+    src = [m.value for m in find_ntt_primes(28, 9, 3)]
+    dst = PRIMES[:2]
+    v = np.stack([rng.integers(0, p, size=RAGGED_N, dtype=np.uint64)
+                  for p in src])
+    w = np.stack([rng.integers(0, min(dst), size=2, dtype=np.uint64)
+                  for _ in src])
+    got = ops.bconv(jnp.asarray(v), jnp.asarray(w), dst, lazy=lazy,
+                    interpret=True)
+    want = ref.bconv_ref(jnp.asarray(v), jnp.asarray(w),
+                         jnp.asarray(np.array(dst, dtype=np.uint64)))
+    assert got.shape == (2, RAGGED_N)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ntt_kernel_rejects_non_dividing_blocks(rng):
+    """The four-step kernel's (R, C) tile grid cannot be padded (stage
+    twiddles are position-dependent), so bad blocks must raise instead
+    of silently truncating."""
+    log_n, log_r = 8, 4
+    n = 1 << log_n
+    mod = find_ntt_primes(30, log_n, 1)[0]
+    psi = find_2nth_root(mod.value, 2 * n)
+    kern = ops.NttKernel(mod.value, psi, log_n, log_r)
+    a = rng.integers(0, mod.value, size=n, dtype=np.uint64)
+    with pytest.raises(ValueError, match="must divide"):
+        kern(jnp.asarray(a), interpret=True, block_c=3)

@@ -4,7 +4,8 @@ import pytest
 
 from repro.core import pipeline as pl
 from repro.core import trace as tr
-from repro.core.params import paper_params_bootstrap, test_params
+from repro.core.params import paper_params_bootstrap
+from repro.core.params import test_params as make_test_params
 
 
 def _helr_like(x, w, consts=None):
@@ -82,7 +83,7 @@ def test_load_save_beats_naive(helr_trace):
 
 
 def test_pipeline_covers_all_ops(helr_trace):
-    params = test_params()
+    params = make_test_params()
     mem = pl.MemoryModel(n_partitions=4)
     sched = pl.generate_load_save_pipeline(helr_trace, params, mem)
     staged = [o.idx for st in sched.stages for o in st.ops]
@@ -91,7 +92,7 @@ def test_pipeline_covers_all_ops(helr_trace):
 
 
 def test_stage_partitions_round_robin(helr_trace):
-    params = test_params()
+    params = make_test_params()
     mem = pl.MemoryModel(n_partitions=4, partition_bytes=1 * 2 ** 20)
     sched = pl.generate_load_save_pipeline(helr_trace, params, mem)
     for i, st in enumerate(sched.stages):
