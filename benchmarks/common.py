@@ -2,10 +2,10 @@
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import time
+import time  # noqa: E402
 
-import numpy as np
-import jax
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
 
 
 def timeit(fn, *args, warmup=1, iters=5):

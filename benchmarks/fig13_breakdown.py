@@ -8,7 +8,7 @@ from benchmarks.common import row, timeit
 from repro.core.params import CkksParams
 from repro.core.context import CkksContext
 from repro.core import modarith as ma, rns
-from repro.core.trace import FheOp, keyswitch_cost, op_cost
+from repro.core.trace import keyswitch_cost
 
 
 def main():

@@ -20,6 +20,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 from benchmarks.common import row
 from repro.compiler import PASS_ORDER, PassConfig, optimize_trace
@@ -92,11 +93,17 @@ def main(argv=()) -> None:
                 enabled.append(stage[1:])
             cfg = PassConfig(start_level=start).with_passes(tuple(enabled))
             try:
-                opt, report = optimize_trace(trace, params, cfg)
+                # verify=True: the static verifier (repro.analysis)
+                # sweeps every applied pass plus the final trace; its
+                # wall time is the overhead this figure's gate bounds
+                opt, report = optimize_trace(trace, params, cfg,
+                                             verify=True)
             except LevelBudgetExhausted as e:
                 row(f"fig17_{wname}_{stage}", 0.0, f"infeasible: {e}")
                 continue
+            t0 = time.perf_counter()
             sched = generate_load_save_pipeline(opt, params, mem)
+            map_wall = time.perf_counter() - t0
             lat = sched.total_latency(args.batch)
             if base_s is None:
                 base_s = lat
@@ -104,7 +111,8 @@ def main(argv=()) -> None:
             n_boot = sum(1 for o in opt.ops if o.kind == "bootstrap")
             derived = (f"{len(opt.ops)}ops {n_rot}rot "
                        f"{n_boot}boot speedup={base_s / lat:.2f}x "
-                       f"compile={report.wall_s * 1e3:.1f}ms")
+                       f"compile={report.wall_s * 1e3:.1f}ms "
+                       f"verify={report.verify_wall_s * 1e3:.1f}ms")
             row(f"fig17_{wname}_{stage}", lat * 1e6, derived)
             records.append({
                 "workload": wname, "stage": stage,
@@ -112,6 +120,9 @@ def main(argv=()) -> None:
                 "n_rotations": n_rot, "n_bootstraps": n_boot,
                 "speedup_vs_unopt": base_s / lat,
                 "compile_wall_s": report.wall_s,
+                "map_wall_s": map_wall,
+                "verify_wall_s": report.verify_wall_s,
+                "verify_findings": report.verify_findings,
                 "smoke": bool(args.smoke),
             })
         # per-pass wall/op-delta detail for the full pipeline (the
@@ -121,6 +132,30 @@ def main(argv=()) -> None:
         if report is not None:
             for ln in report.format_table(include_wall=True).splitlines():
                 print(f"# {ln}")
+
+    # verification-overhead gate: across the whole run, the static
+    # verifier must cost < 5% of compile wall. "Compile" is the full
+    # trace->schedule path (passes + mapper), the same window the
+    # compile cache's compile span times. Aggregate, not per-record —
+    # a 6-op workload's fixed per-sweep cost is a large fraction of a
+    # sub-millisecond compile, which says nothing about the verifier's
+    # scaling. Full run only: the smoke setting's compiles are so
+    # short the ratio is all constant overhead.
+    c_wall = sum(r["compile_wall_s"] + r["map_wall_s"] for r in records)
+    v_wall = sum(r["verify_wall_s"] for r in records)
+    n_find = sum(r["verify_findings"] for r in records)
+    row("fig17_verify_overhead", v_wall * 1e6,
+        f"verify/compile={v_wall / c_wall * 100:.1f}% "
+        f"findings={n_find} records={len(records)}")
+    assert n_find == 0, (
+        f"verify gate: {n_find} finding(s) on benchmark workloads — "
+        f"the compiler emitted an invalid trace")
+    if not args.smoke:
+        assert v_wall < 0.05 * c_wall, (
+            f"verify gate: {v_wall * 1e3:.1f}ms verification vs "
+            f"{c_wall * 1e3:.1f}ms compile "
+            f"({v_wall / c_wall * 100:.1f}% > 5%)")
+
     with open(out_path, "w") as f:
         for r in records:
             f.write(json.dumps(r) + "\n")

@@ -9,7 +9,7 @@ evk+2 operands.
 """
 from benchmarks.common import row
 from repro.core.params import paper_params_bootstrap
-from repro.core.trace import (FheOp, ct_bytes, evk_bytes, keyswitch_cost,
+from repro.core.trace import (FheOp, ct_bytes, evk_bytes,
                               op_cost)
 
 

@@ -44,7 +44,6 @@ from repro.core.pipeline import MemoryModel
 from repro.fleet import FleetScheduler
 from repro.runtime.batcher import BatchPolicy
 from repro.runtime.compile_cache import CompileCache
-from repro.runtime.keycache import KeyCache
 from repro.runtime.queue import Request
 from repro.runtime.workloads import (HELR_CONSTS, LOLA_CONSTS, lola_infer,
                                      make_helr_iter, make_matvec,

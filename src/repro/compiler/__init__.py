@@ -18,8 +18,8 @@ Entry points: ``optimize_trace(trace, params, PassConfig())``; the
 serving runtime reaches it via ``CompileCache.get_schedule(...,
 pass_config=...)`` and ``repro.launch.serve_fhe --opt``.
 """
-from repro.compiler.manager import (CompileReport, PassConfig, PassReport,
-                                    PassStats, analytic_seconds,
+from repro.compiler.manager import (CompileReport, PassConfig, PassManager,
+                                    PassReport, PassStats, analytic_seconds,
                                     optimize_trace, trace_cost)
 from repro.compiler.passes import (PASS_ORDER, BootstrapInsertion,
                                    CommonSubexpr, ConstantFold,
@@ -28,7 +28,7 @@ from repro.compiler.passes import (PASS_ORDER, BootstrapInsertion,
 from repro.compiler.interp import CkksTraceInterpreter, reference_eval
 
 __all__ = [
-    "CompileReport", "PassConfig", "PassReport", "PassStats",
+    "CompileReport", "PassConfig", "PassManager", "PassReport", "PassStats",
     "analytic_seconds",
     "optimize_trace", "trace_cost", "PASS_ORDER", "BootstrapInsertion",
     "CommonSubexpr", "ConstantFold", "DeadCodeElimination", "LazyRescale",

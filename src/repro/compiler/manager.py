@@ -107,6 +107,8 @@ class PassStats:
     reverted: bool = False
     wall_s: float = 0.0               # compile-time cost of the pass
                                       # itself (run + cost re-check)
+    verify_wall_s: float = 0.0        # repro.analysis per-pass sweep
+    verify_findings: int = 0          # findings (any severity) it raised
 
     @property
     def delta_ops(self) -> int:
@@ -126,6 +128,10 @@ class CompileReport:
     seconds_opt: float
     n_ops_unopt: int
     n_ops_opt: int
+    # static-verification accounting (repro.analysis): per-pass sweeps
+    # plus the final full-budget trace verification
+    verify_wall_s: float = 0.0
+    verify_findings: int = 0
 
     @property
     def speedup(self) -> Optional[float]:
@@ -174,15 +180,36 @@ def _try_seconds(trace, params, start, boot_to):
 
 
 def optimize_trace(trace: FheTrace, params: CkksParams,
-                   config: Optional[PassConfig] = None
+                   config: Optional[PassConfig] = None, *,
+                   verify: bool = False,
+                   passes: Optional[List[Pass]] = None
                    ) -> Tuple[FheTrace, CompileReport]:
     """Run the enabled passes in canonical order over a private copy.
 
     Returns (optimized trace with levels inferred, per-pass report).
     Raises LevelBudgetExhausted only if the trace is too deep AND
     bootstrap insertion is disabled (or cannot fix it).
+
+    ``verify=True`` runs the static verifier (repro.analysis) after
+    every applied pass — an error finding raises
+    `PassVerificationError` naming the offending pass — plus one full
+    level-budget verification of the final trace. Per-pass sweeps skip
+    the budget rules: a mid-pipeline trace may be legally deeper than
+    the chain until bootstrap insertion runs.
+
+    ``passes`` overrides the config's enabled pass list (same Pass
+    protocol: .name, .may_increase_cost, .run) — the hook the mutation
+    harness uses to inject a corrupting pass without touching
+    PASS_ORDER.
     """
     config = config or PassConfig()
+    if verify:
+        # deferred import: repro.analysis imports core only, but keep
+        # the compiler importable without it on the hot path anyway
+        from repro.analysis.findings import (PassVerificationError,
+                                             VerificationError)
+        from repro.analysis.verify_ir import verify_trace
+        from repro.analysis.verify_schedule import verify_pass
     start = config.resolve_start_level(trace, params)
     work = FheTrace(clone_ops(trace), list(trace.inputs),
                     list(trace.outputs), list(trace.consts))
@@ -190,7 +217,8 @@ def optimize_trace(trace: FheTrace, params: CkksParams,
     n_unopt = len(work.ops)
     sec = sec_unopt
     stats: List[PassStats] = []
-    for p in config.enabled():
+    v_wall, v_found = 0.0, 0
+    for p in (config.enabled() if passes is None else passes):
         before_ops = len(work.ops)
         t0 = time.perf_counter()
         new = p.run(work, params, config)
@@ -205,12 +233,58 @@ def optimize_trace(trace: FheTrace, params: CkksParams,
                 and sec is not None and sec_new is not None:
             assert sec_new <= sec * (1 + 1e-9), \
                 f"pass {p.name} increased analytic cost {sec} -> {sec_new}"
-        stats.append(PassStats(p.name, before_ops, len(new.ops),
-                               sec, sec_new, applied, reverted,
-                               wall_s=wall))
+        st = PassStats(p.name, before_ops, len(new.ops),
+                       sec, sec_new, applied, reverted, wall_s=wall)
+        if verify and applied:
+            rep = verify_pass(work, new, check_budget=False,
+                              start_level=start,
+                              bootstrap_to=config.bootstrap_to,
+                              subject=p.name)
+            st.verify_wall_s = rep.wall_s
+            st.verify_findings = len(rep.findings)
+            v_wall += rep.wall_s
+            v_found += len(rep.findings)
+            if not rep.ok:
+                raise PassVerificationError(p.name, rep)
+        stats.append(st)
         work, sec = new, sec_new
     if sec is None:
         # still infeasible: surface the structured error to the caller
         infer_levels(work, start, config.bootstrap_to)
+    if verify:
+        # final sweep WITH the budget rules: every pass has had its say
+        rep = verify_trace(work, start_level=start,
+                           bootstrap_to=config.bootstrap_to,
+                           check_budget=True, subject="post-pipeline")
+        v_wall += rep.wall_s
+        v_found += len(rep.findings)
+        if not rep.ok:
+            raise VerificationError(rep, context="optimized trace")
     return work, CompileReport(stats, sec_unopt, sec, n_unopt,
-                               len(work.ops))
+                               len(work.ops), verify_wall_s=v_wall,
+                               verify_findings=v_found)
+
+
+class PassManager:
+    """Object wrapper over `optimize_trace` for callers that configure
+    once and compile many traces (the lint CLI, tests, notebooks):
+
+        pm = PassManager(PassConfig(), verify=True)
+        opt, report = pm.run(trace, params)
+
+    `verify=True` re-verifies the trace after each applied pass and
+    attributes the first invariant violation to the offending pass by
+    raising `PassVerificationError(pass_name=...)`.
+    """
+
+    def __init__(self, config: Optional[PassConfig] = None, *,
+                 verify: bool = False,
+                 passes: Optional[List[Pass]] = None):
+        self.config = config or PassConfig()
+        self.verify = verify
+        self.passes = passes
+
+    def run(self, trace: FheTrace,
+            params: CkksParams) -> Tuple[FheTrace, CompileReport]:
+        return optimize_trace(trace, params, self.config,
+                              verify=self.verify, passes=self.passes)

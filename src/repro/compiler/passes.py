@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import math
 from collections import Counter
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.core.params import CkksParams
 from repro.core.trace import (FheOp, FheTrace, LevelBudgetExhausted,

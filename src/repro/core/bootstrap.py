@@ -26,7 +26,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import linalg, ops as hops
-from repro.core.ciphertext import Ciphertext, KeySwitchKey, Plaintext
+from repro.core.ciphertext import Ciphertext, KeySwitchKey
 from repro.core.context import CkksContext
 from repro.core.encoder import CkksEncoder
 

@@ -13,7 +13,7 @@ prime of Q∪P), and  ksk_d = (-a_d s + e_d + g_d * s_src , a_d).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 import jax.numpy as jnp

@@ -18,10 +18,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 from repro.core.params import CkksParams
-from repro.core.trace import FheOp, FheTrace, OpCost, ct_bytes, op_cost
+from repro.core.trace import FheOp, FheTrace, OpCost, op_cost
 
 
 @dataclasses.dataclass

@@ -36,7 +36,8 @@ class LevelBudgetExhausted(Exception):
 @dataclasses.dataclass
 class FheOp:
     idx: int
-    kind: str                     # input|const|hmul|hadd|hsub|pmul|padd|rotate|conjugate|rescale|bootstrap
+    kind: str                     # input|const|hmul|hadd|hsub|pmul|padd|
+                                  #   rotate|conjugate|rescale|bootstrap
     args: Tuple[int, ...] = ()
     meta: dict = dataclasses.field(default_factory=dict)
     level: Optional[int] = None   # filled by level inference

@@ -8,7 +8,7 @@ fault supervisor replay, dry-run specs) only depends on that contract.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 import jax

@@ -18,12 +18,11 @@ subprocess) check bit-exactness against rns.bconv.
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import modarith as ma
 

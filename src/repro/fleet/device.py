@@ -137,7 +137,8 @@ class Device:
                  = generate_load_save_pipeline,
                  pass_config=None,
                  continuous_batching: bool = False,
-                 preempt: bool = False):
+                 preempt: bool = False,
+                 verify: bool = False):
         self.device_id = device_id
         self.params = params
         self.mem = mem
@@ -149,7 +150,7 @@ class Device:
         self.key_cache = key_cache
         if key_cache is not None:
             key_cache.metrics = metrics
-        self.compile_cache = CompileCache(metrics)
+        self.compile_cache = CompileCache(metrics, verify=verify)
         self.mapper = mapper
         self.pass_config = pass_config
         self.continuous_batching = continuous_batching

@@ -59,7 +59,8 @@ class FleetScheduler:
                  pass_config: Optional[PassConfig] = None,
                  continuous_batching: bool = False,
                  preempt: bool = False,
-                 latency_reservoir: Optional[int] = None):
+                 latency_reservoir: Optional[int] = None,
+                 verify: bool = False):
         assert n_devices >= 1
         self.params = params
         self.mem = mem
@@ -85,7 +86,8 @@ class FleetScheduler:
                 i, params, mem, make_backend(), self.policy, self.metrics,
                 key_cache=kc, max_depth_per_tenant=max_depth_per_tenant,
                 mapper=mapper, pass_config=pass_config,
-                continuous_batching=continuous_batching, preempt=preempt))
+                continuous_batching=continuous_batching, preempt=preempt,
+                verify=verify))
             self.metrics.device_busy_s.setdefault(i, 0.0)
         self.router = Router(router, self.devices, self.metrics)
         self.workloads: Dict[str, Workload] = {}

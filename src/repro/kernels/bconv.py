@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import addmod32, mont_mul32, mul32_wide
+from repro.kernels.common import addmod32, mont_mul32
 
 U32 = jnp.uint32
 

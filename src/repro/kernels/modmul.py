@@ -10,7 +10,6 @@ form by the ops.py wrapper, so `mont_mul32(a, b_mont) == a*b mod q` exactly.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ benchmarks/fig14_kernels.py.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import numpy as np
 import jax

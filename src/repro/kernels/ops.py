@@ -6,7 +6,7 @@ interpret-mode selection (interpret=True on CPU; compiled on TPU).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import Sequence
 
 import numpy as np
@@ -25,7 +25,16 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _mont_consts(primes: Sequence[int]):
+@lru_cache(maxsize=256)
+def _mont_consts(primes: tuple):
+    """Per-prime-basis constants (q as u64/u32, -q^-1 mod 2^32, R mod q).
+
+    Cached on the prime tuple: the host-side modular inverses and the
+    four host->device transfers would otherwise run on EVERY wrapper
+    call — eager per-call work outside the jit boundary, the same bug
+    class the fused keyswitch pipeline fixed (tests guard this stays
+    cached)."""
+    q64 = jnp.asarray(np.array(primes, dtype=np.uint64))
     q32 = jnp.asarray(np.array(primes, dtype=np.uint32))
     qinv = jnp.asarray(np.array(
         [(-pow(int(p), -1, 1 << 32)) % (1 << 32) for p in primes],
@@ -33,7 +42,11 @@ def _mont_consts(primes: Sequence[int]):
     # R mod q: plain mulmod(b, rm) == b * 2^32 mod q (Montgomery form)
     rm = jnp.asarray(np.array([(1 << 32) % int(p) for p in primes],
                               dtype=np.uint64))
-    return q32, qinv, rm
+    return q64, q32, qinv, rm
+
+
+def _key(primes: Sequence[int]) -> tuple:
+    return tuple(int(p) for p in primes)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -45,8 +58,7 @@ def _modmul_impl(a, b, q64, q32, qinv, rm, interpret=True):
 
 def modmul(a, b, primes: Sequence[int], interpret=None):
     """(a*b) mod q per limb. a, b: (L, N) u64; primes: python ints."""
-    q32, qinv, rm = _mont_consts(primes)
-    q64 = jnp.asarray(np.array(primes, dtype=np.uint64))
+    q64, q32, qinv, rm = _mont_consts(_key(primes))
     itp = _default_interpret() if interpret is None else interpret
     record_dispatch()
     return _modmul_impl(a, b, q64, q32, qinv, rm, interpret=itp)
@@ -62,8 +74,7 @@ def _mulacc_impl(a, b, c, q64, q32, qinv, rm, interpret=True):
 
 def mulacc(a, b, c, primes: Sequence[int], interpret=None):
     """(a*b + c) mod q per limb."""
-    q32, qinv, rm = _mont_consts(primes)
-    q64 = jnp.asarray(np.array(primes, dtype=np.uint64))
+    q64, q32, qinv, rm = _mont_consts(_key(primes))
     itp = _default_interpret() if interpret is None else interpret
     record_dispatch()
     return _mulacc_impl(a, b, c, q64, q32, qinv, rm, interpret=itp)
@@ -84,9 +95,8 @@ def _bconv_impl(v, wt, p64, p32, pinv, rm, lazy=False, interpret=True):
 def bconv(v, w, dst_primes: Sequence[int], lazy: bool = False,
           interpret=None):
     """out[d] = sum_j v[j]*w[j,d] mod p_d. v: (S,N) u64; w: (S,D) u64."""
-    p32, pinv, rm64 = _mont_consts(dst_primes)
+    p64, p32, pinv, rm64 = _mont_consts(_key(dst_primes))
     itp = _default_interpret() if interpret is None else interpret
-    p64 = jnp.asarray(np.array(dst_primes, dtype=np.uint64))
     record_dispatch()
     return _bconv_impl(v, w.T, p64, p32, pinv, rm64, lazy=lazy,
                        interpret=itp)

@@ -23,7 +23,7 @@ import time  # noqa: E402
 import traceback  # noqa: E402
 
 import jax  # noqa: E402
-from repro.compat import set_mesh as compat_set_mesh
+from repro.compat import set_mesh as compat_set_mesh  # noqa: E402
 
 from repro.configs import list_archs  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402

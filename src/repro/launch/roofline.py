@@ -27,7 +27,7 @@ import traceback  # noqa: E402
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
-from repro.compat import set_mesh as compat_set_mesh
+from repro.compat import set_mesh as compat_set_mesh  # noqa: E402
 
 from repro.configs import get_config, DASHED  # noqa: E402
 from repro.launch.dryrun import RESULTS_DIR, collective_bytes  # noqa: E402

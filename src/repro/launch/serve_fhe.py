@@ -67,17 +67,19 @@ def build_executor(params: CkksParams, mem: MemoryModel, *,
                    backend_name: str, max_batch: int, max_wait_s: float,
                    cache_bytes: int, start_level: int,
                    opt: bool = True,
-                   use_kernels: bool = None) -> PipelinedExecutor:
+                   use_kernels: bool = None,
+                   verify: bool = False) -> PipelinedExecutor:
     from repro.runtime.executor import resolve_backend
     policy = BatchPolicy(slots_per_ct=params.slots, max_batch=max_batch,
                          max_wait_s=max_wait_s)
     key_cache = (KeyCache(cache_bytes, load_bw=mem.load_bw)
                  if cache_bytes > 0 else None)
     backend = resolve_backend(backend_name, params, mem,
-                              use_kernels=use_kernels)
+                              use_kernels=use_kernels, verify=verify)
     ex = PipelinedExecutor(params, mem, backend=backend, policy=policy,
                            key_cache=key_cache,
-                           pass_config=PassConfig() if opt else None)
+                           pass_config=PassConfig() if opt else None,
+                           verify=verify)
     for name, (fn, n_in, consts) in WORKLOADS.items():
         try:
             ex.register(name, fn, n_in, const_names=consts,
@@ -94,7 +96,8 @@ def build_fleet_scheduler(params: CkksParams, mem: MemoryModel, *,
                           max_batch: int, max_wait_s: float,
                           cache_bytes: int, start_level: int,
                           opt: bool = True, continuous_batching: bool = False,
-                          preempt: bool = False, use_kernels: bool = None):
+                          preempt: bool = False, use_kernels: bool = None,
+                          verify: bool = False):
     """Fleet-mode mirror of build_executor: N devices (each with its own
     backend instance and caches), one router, one scheduler."""
     from repro.fleet import FleetScheduler
@@ -104,12 +107,13 @@ def build_fleet_scheduler(params: CkksParams, mem: MemoryModel, *,
 
     def backend_factory():
         return resolve_backend(backend_name, params, mem,
-                               use_kernels=use_kernels)
+                               use_kernels=use_kernels, verify=verify)
     fleet = FleetScheduler(
         params, mem, n_devices=n_devices, backend=backend_factory,
         router=router, policy=policy, cache_bytes=cache_bytes,
         pass_config=PassConfig() if opt else None,
-        continuous_batching=continuous_batching, preempt=preempt)
+        continuous_batching=continuous_batching, preempt=preempt,
+        verify=verify)
     for name, (fn, n_in, consts) in WORKLOADS.items():
         try:
             fleet.register(name, fn, n_in, const_names=consts,
@@ -221,6 +225,13 @@ def main() -> None:
                          "(repro.kernels.keyswitch; bit-exact vs the "
                          "library path, compiled on TPU / interpret mode "
                          "on CPU); default: on iff running on TPU")
+    ap.add_argument("--verify", action="store_true",
+                    help="static verification (repro.analysis): sweep "
+                         "every freshly compiled schedule (per-pass "
+                         "diffs, trace/schedule invariants) and — with "
+                         "--backend pim — hazard-analyze every lowered "
+                         "instruction stream; an error finding aborts "
+                         "instead of serving a corrupt artifact")
     ap.add_argument("--opt", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="run the optimizing trace compiler "
@@ -284,14 +295,16 @@ def main() -> None:
             cache_bytes=args.cache_mb * 2 ** 20,
             start_level=start_level, opt=args.opt,
             continuous_batching=args.continuous_batching,
-            preempt=args.preempt, use_kernels=args.use_kernels)
+            preempt=args.preempt, use_kernels=args.use_kernels,
+            verify=args.verify)
     else:
         ex = build_executor(params, mem, backend_name=args.backend,
                             max_batch=args.max_batch,
                             max_wait_s=args.max_wait_ms * 1e-3,
                             cache_bytes=args.cache_mb * 2 ** 20,
                             start_level=start_level, opt=args.opt,
-                            use_kernels=args.use_kernels)
+                            use_kernels=args.use_kernels,
+                            verify=args.verify)
     arrivals = synth_arrivals(
         ex, n_tenants=args.tenants, n_requests=args.requests,
         rate_rps=args.rate, seed=args.seed,
@@ -323,6 +336,24 @@ def main() -> None:
         ex.metrics.event_log = JsonEventLog(sys.stdout)
     m = ex.serve(arrivals)
     print(m.format_table())
+    if args.verify:
+        # warmup compiles point metrics at a scratch registry, so the
+        # durable record is the one riding the cached schedules (and,
+        # for pim, the backend's lower-time counters)
+        caches = ([d.compile_cache for d in ex.devices]
+                  if args.fleet > 0 else [ex.compile_cache])
+        backends = ([d.backend for d in ex.devices]
+                    if args.fleet > 0 else [ex.backend])
+        scheds = [s for c in caches for s in c._cache.values()]
+        v_wall = sum(getattr(s, "_verify_wall_s", 0.0) for s in scheds)
+        v_find = sum(len(s.verify_report.findings) for s in scheds
+                     if getattr(s, "verify_report", None) is not None)
+        v_wall += sum(getattr(b, "verify_wall_s", 0.0) for b in backends)
+        v_find += sum(getattr(b, "verify_findings", 0) for b in backends)
+        print(f"verify: {len(scheds)} schedule(s) + "
+              f"{sum(len(getattr(b, '_lowered', ())) for b in backends)} "
+              f"lowered program(s) swept, {v_find} finding(s), "
+              f"{v_wall * 1e3:.1f} ms wall")
     if tracer is not None:
         from repro.obs import write_trace
         wall = args.backend in ("mesh", "ciphertext")

@@ -6,10 +6,8 @@ accumulators) so the FHE core's global x64 flag never changes LM numerics.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

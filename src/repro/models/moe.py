@@ -20,7 +20,6 @@ mode='drop' scatters, so everything jits with static shapes.
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

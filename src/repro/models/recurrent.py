@@ -8,7 +8,6 @@ hybrid's attention layers).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

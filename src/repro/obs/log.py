@@ -24,7 +24,7 @@ Like the tracer, the log hangs off the shared registry
 from __future__ import annotations
 
 import json
-from typing import IO, Optional
+from typing import IO
 
 # requests are duck-typed (runtime.queue.Request) to avoid importing
 # the runtime package from obs (see tracer.py)

@@ -35,8 +35,13 @@ class PimBackend:
     instruction on a `PimArch` instead of the flat MemoryModel."""
 
     def __init__(self, arch: Optional[PimArch] = None,
-                 preset: str = "fhemem"):
+                 preset: str = "fhemem", verify: bool = False):
         self.arch = arch if arch is not None else get_arch(preset)
+        # verify=True runs the static hazard analyzer
+        # (repro.analysis.pim_hazards) over every freshly lowered
+        # program; an error finding raises VerificationError before the
+        # stream can execute
+        self.verify = verify
         # keyed by id(schedule); the schedule reference is retained so
         # a recycled id can never alias a dead schedule
         self._lowered: Dict[int, Tuple[PipelineSchedule, LayoutPlan,
@@ -44,6 +49,9 @@ class PimBackend:
         # workload -> per-stage {stage, load_s, compute_s, move_s} of
         # the most recent batch (fig19's breakdown source)
         self.last_breakdown: Dict[str, List[dict]] = {}
+        # verify-on-lower accounting, aggregated by serve_fhe --verify
+        self.verify_wall_s = 0.0
+        self.verify_findings = 0
 
     def program_for(self, schedule: PipelineSchedule) -> PimProgram:
         key = id(schedule)
@@ -51,6 +59,14 @@ class PimBackend:
         if hit is None or hit[0] is not schedule:
             layout = plan_layout(schedule, self.arch)
             prog = lower_schedule(schedule, self.arch, layout)
+            if self.verify:
+                from repro.analysis.findings import VerificationError
+                from repro.analysis.pim_hazards import analyze_program
+                rep = analyze_program(prog, schedule, self.arch, layout)
+                self.verify_wall_s += rep.wall_s
+                self.verify_findings += len(rep.findings)
+                if not rep.ok:
+                    raise VerificationError(rep, context="pim lower")
             self._lowered[key] = (schedule, layout, prog)
             return prog
         return hit[2]
@@ -128,8 +144,8 @@ class PimBackend:
         return total
 
 
-def resolve_pim_backend(mem) -> PimBackend:
+def resolve_pim_backend(mem, verify: bool = False) -> PimBackend:
     """Backend for `resolve_backend("pim", ...)`: recover the arch the
     MemoryModel was projected from (preset match), else wrap the mem in
     a degenerate arch that bills identically to AnalyticBackend."""
-    return PimBackend(arch=arch_for_memory_model(mem))
+    return PimBackend(arch=arch_for_memory_model(mem), verify=verify)

@@ -53,12 +53,51 @@ class CompileCache:
     lists plus floats — and the workload universe is the registry, not
     the request stream, so no eviction policy is needed)."""
 
-    def __init__(self, metrics: Optional[MetricsRegistry] = None):
+    def __init__(self, metrics: Optional[MetricsRegistry] = None,
+                 verify: bool = False):
+        """``verify=True`` arms verify-on-miss: every freshly compiled
+        schedule is swept by the static verifier (repro.analysis) —
+        per-pass when the optimizer runs, then trace + schedule — and
+        an error finding raises `VerificationError` instead of caching
+        a corrupt schedule. Hits skip verification (the artifact in the
+        cache already passed)."""
         self.metrics = metrics or MetricsRegistry()
+        self.verify = verify
         self._cache: Dict[Tuple, PipelineSchedule] = {}
 
     def __len__(self) -> int:
         return len(self._cache)
+
+    def _verify_miss(self, sched: PipelineSchedule, trace: FheTrace,
+                     params: CkksParams,
+                     pass_config: Optional[PassConfig],
+                     pass_report) -> None:
+        """Static verification of a freshly compiled schedule. When the
+        optimizer ran, the final trace already passed its full-budget
+        sweep inside `optimize_trace(verify=True)` — only the schedule
+        invariants remain; verbatim-serving misses verify both."""
+        from repro.analysis.findings import VerificationError
+        from repro.analysis.verify_ir import resolve_start_level
+        from repro.analysis.verify_schedule import verify_schedule
+        if pass_config is not None:
+            start = pass_config.resolve_start_level(trace, params)
+            boot_to = pass_config.bootstrap_to
+        else:
+            start = resolve_start_level(trace, None)
+            boot_to = None
+        rep = verify_schedule(sched, start_level=start,
+                              bootstrap_to=boot_to,
+                              include_trace=pass_config is None)
+        wall = rep.wall_s + (pass_report.verify_wall_s
+                             if pass_report is not None else 0.0)
+        found = len(rep.findings) + (pass_report.verify_findings
+                                     if pass_report is not None else 0)
+        sched.verify_report = rep
+        sched._verify_wall_s = wall
+        self.metrics.incr("verify_findings", by=found)
+        self.metrics.incr("verify_errors", by=len(rep.errors))
+        if not rep.ok:
+            raise VerificationError(rep, context="compile verify")
 
     def get_schedule(self, trace: FheTrace, params: CkksParams,
                      mem: MemoryModel,
@@ -91,10 +130,14 @@ class CompileCache:
             t0 = time.perf_counter()
             report = None
             if pass_config is not None:
-                trace, report = optimize_trace(trace, params, pass_config)
+                trace, report = optimize_trace(trace, params, pass_config,
+                                               verify=self.verify)
                 self.metrics.incr("traces_optimized")
             sched = mapper(trace, params, mem, **mapper_kwargs)
             sched.pass_report = report
+            if self.verify:
+                self._verify_miss(sched, trace, params, pass_config,
+                                  report)
             sched._compile_wall_s = time.perf_counter() - t0
             self._cache[key] = sched
         sched = self._cache[key]
@@ -103,7 +146,13 @@ class CompileCache:
                 "compile", obs.t0, parent=obs.parent, track=obs.track,
                 hit=hit, wall_s=0.0 if hit
                 else getattr(sched, "_compile_wall_s", 0.0),
-                n_stages=len(sched.stages))
+                n_stages=len(sched.stages),
+                verify_wall_s=0.0 if hit
+                else getattr(sched, "_verify_wall_s", 0.0),
+                verify_findings=0 if hit else (
+                    len(getattr(sched, "verify_report").findings)
+                    if getattr(sched, "verify_report", None) is not None
+                    else 0))
             if not hit and sched.pass_report is not None:
                 for s in sched.pass_report.passes:
                     obs.tracer.instant(

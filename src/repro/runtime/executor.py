@@ -310,7 +310,8 @@ BACKEND_NAMES = ("analytic", "mesh", "ciphertext", "pim")
 
 
 def resolve_backend(name: str, params: CkksParams, mem: MemoryModel,
-                    use_kernels: Optional[bool] = None):
+                    use_kernels: Optional[bool] = None,
+                    verify: bool = False):
     """Build a backend from its CLI/ctor name: ``analytic`` (cost model),
     ``mesh`` (distributed placeholder stages), ``ciphertext`` (real
     encrypted execution via repro.compiler.engine), ``pim``
@@ -321,7 +322,11 @@ def resolve_backend(name: str, params: CkksParams, mem: MemoryModel,
 
     ``use_kernels`` (ciphertext backend only) routes keyswitch + modmul
     through the fused Pallas kernels; None keeps the backend's own
-    default (on iff running on TPU)."""
+    default (on iff running on TPU).
+
+    ``verify`` (pim backend only) arms the static hazard analyzer
+    (repro.analysis.pim_hazards) over every freshly lowered instruction
+    stream."""
     if name == "analytic":
         return AnalyticBackend(mem)
     if name == "mesh":
@@ -331,7 +336,7 @@ def resolve_backend(name: str, params: CkksParams, mem: MemoryModel,
         return CiphertextBackend(params, use_kernels=use_kernels)
     if name == "pim":
         from repro.pim.backend import resolve_pim_backend
-        return resolve_pim_backend(mem)
+        return resolve_pim_backend(mem, verify=verify)
     from repro.pim.arch import PRESETS
     raise ValueError(
         f"unknown backend {name!r}: valid backends are "
@@ -354,7 +359,8 @@ class PipelinedExecutor:
                  max_depth_per_tenant: int = 256,
                  mapper: Callable[..., PipelineSchedule]
                  = generate_load_save_pipeline,
-                 pass_config: Optional[PassConfig] = None):
+                 pass_config: Optional[PassConfig] = None,
+                 verify: bool = False):
         self.params = params
         self.mem = mem
         self.metrics = MetricsRegistry(n_partitions=mem.n_partitions)
@@ -371,7 +377,9 @@ class PipelinedExecutor:
         self.key_cache = key_cache
         if key_cache is not None:
             key_cache.metrics = self.metrics   # one registry for all parts
-        self.compile_cache = CompileCache(self.metrics)
+        # verify=True arms static verify-on-miss (repro.analysis): every
+        # freshly compiled schedule is swept before it can serve
+        self.compile_cache = CompileCache(self.metrics, verify=verify)
         self.mapper = mapper
         # optimizing compiler (repro.compiler) between capture and the
         # mapper; None serves every trace verbatim

@@ -13,7 +13,6 @@ single-host container everything lands in one file.
 from __future__ import annotations
 
 import io
-import json
 import os
 import threading
 import time

@@ -2,7 +2,6 @@
 shardings (FSDP'd params => ZeRO-sharded optimizer states for free)."""
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

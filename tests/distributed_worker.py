@@ -13,7 +13,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
-from repro.compat import set_mesh as compat_set_mesh
+from repro.compat import set_mesh as compat_set_mesh  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 

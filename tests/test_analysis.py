@@ -1,0 +1,232 @@
+"""Static verification layer (repro.analysis): every rule must prove
+itself both ways — silent on clean artifacts, firing with exactly its
+own rule id on the seeded mutation built to trip it."""
+import pytest
+
+from repro.analysis import (RULES, PassVerificationError, VerificationError,
+                            analyze_program, verify_pass, verify_schedule,
+                            verify_trace)
+from repro.analysis.lint import main as lint_main
+from repro.analysis.lint import sweep
+from repro.analysis.mutate import (ALL_MUTATIONS, PASS_MUTATIONS,
+                                   PIM_MUTATIONS, SCHEDULE_MUTATIONS,
+                                   TRACE_MUTATIONS, CorruptingPass,
+                                   make_clean_artifacts)
+from repro.compiler import PassConfig, PassManager, optimize_trace
+from repro.core.params import test_params as smoke_params
+from repro.core.trace import FheOp, FheTrace
+from repro.runtime.compile_cache import CompileCache
+
+
+@pytest.fixture(scope="module")
+def art():
+    return make_clean_artifacts("matvec", "fhemem")
+
+
+# ---------------------------------------------------------------------------
+# catalogue hygiene
+# ---------------------------------------------------------------------------
+
+def test_every_rule_has_a_mutation():
+    assert sorted(ALL_MUTATIONS) == sorted(RULES), \
+        "every catalogue rule needs a seeding mutation (and vice versa)"
+
+
+# ---------------------------------------------------------------------------
+# clean artifacts: zero findings
+# ---------------------------------------------------------------------------
+
+def test_clean_artifacts_zero_findings(art):
+    assert verify_trace(art.trace,
+                        start_level=art.start_level).findings == []
+    assert verify_schedule(art.schedule, start_level=art.start_level,
+                           include_trace=False).findings == []
+    assert analyze_program(art.program, art.schedule, art.arch,
+                           art.layout).findings == []
+
+
+def test_clean_sweep_smoke_zero_findings():
+    """The lint gate's own sweep: every workload x config x preset the
+    CI gate runs must come back clean."""
+    params = smoke_params(log_n=10, n_levels=8, dnum=2)
+    reports = sweep(params, params.n_levels - 1,
+                    workloads=["matvec", "poly"], presets=["fhemem"])
+    bad = [r for r in reports if r.findings]
+    assert not bad, "\n".join(r.format_table() for r in bad)
+
+
+# ---------------------------------------------------------------------------
+# seeded mutations: each rule fires with its own id
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", sorted(TRACE_MUTATIONS))
+def test_trace_mutation_fires(art, rule):
+    mutated = TRACE_MUTATIONS[rule](art.trace)
+    rep = verify_trace(mutated, start_level=art.start_level)
+    assert rule in rep.rule_ids(), rep.format_table()
+    # and the clean original still passes — the mutator didn't leak
+    assert verify_trace(art.trace, start_level=art.start_level).ok
+
+
+@pytest.mark.parametrize("rule", sorted(SCHEDULE_MUTATIONS))
+def test_schedule_mutation_fires(art, rule):
+    mutated = SCHEDULE_MUTATIONS[rule](art.schedule)
+    rep = verify_schedule(mutated, start_level=art.start_level,
+                          include_trace=False)
+    assert rule in rep.rule_ids(), rep.format_table()
+    assert verify_schedule(art.schedule, start_level=art.start_level,
+                           include_trace=False).ok
+
+
+@pytest.mark.parametrize("rule", sorted(PIM_MUTATIONS))
+def test_pim_mutation_fires(art, rule):
+    prog, layout = PIM_MUTATIONS[rule](art.program, art.schedule,
+                                       art.layout, art.arch)
+    rep = analyze_program(prog, art.schedule, art.arch, layout)
+    assert rule in rep.rule_ids(), rep.format_table()
+    assert analyze_program(art.program, art.schedule, art.arch,
+                           art.layout).ok
+
+
+@pytest.mark.parametrize("rule", sorted(PASS_MUTATIONS))
+def test_pass_mutation_fires_via_verify_pass(art, rule):
+    mutated = PASS_MUTATIONS[rule](art.trace)
+    rep = verify_pass(art.trace, mutated, subject="seeded")
+    assert rule in rep.rule_ids(), rep.format_table()
+
+
+# ---------------------------------------------------------------------------
+# pass attribution: PassManager(verify=True) names the offending pass
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", sorted(PASS_MUTATIONS))
+def test_pass_manager_attributes_corrupting_pass(art, rule):
+    pm = PassManager(PassConfig(start_level=art.start_level), verify=True,
+                     passes=[CorruptingPass(rule, name="evil")])
+    with pytest.raises(PassVerificationError) as ei:
+        pm.run(art.trace, art.params)
+    assert ei.value.pass_name == "evil"
+    assert rule in ei.value.report.rule_ids()
+
+
+def test_pass_manager_attributes_mid_pipeline_corruption(art):
+    """The corrupting pass hides between legitimate passes; the error
+    still names it, not its neighbours."""
+    from repro.compiler.passes import PASS_ORDER
+    legit = [p for p in PASS_ORDER if p.name in ("dce", "cse")]
+    passes = [legit[0], CorruptingPass("P-IFACE", name="sneaky"),
+              legit[1]]
+    with pytest.raises(PassVerificationError) as ei:
+        optimize_trace(art.trace, art.params,
+                       PassConfig(start_level=art.start_level),
+                       verify=True, passes=passes)
+    assert ei.value.pass_name == "sneaky"
+
+
+def test_verify_clean_pipeline_reports_overhead(art):
+    """verify=True on a clean compile: no exception, and the report
+    carries the verification wall time for fig17/fig21."""
+    opt, rep = optimize_trace(art.trace, art.params,
+                              PassConfig(start_level=art.start_level),
+                              verify=True)
+    assert rep.verify_wall_s > 0
+    applied = [s for s in rep.passes if s.applied]
+    assert applied and all(s.verify_wall_s > 0 for s in applied)
+
+
+# ---------------------------------------------------------------------------
+# T-BUDGET reports the earliest failure and the latest-legal cut
+# ---------------------------------------------------------------------------
+
+def test_budget_finding_names_latest_legal_cut():
+    # start level 1: m = x0*x1 lands at 0, m2 = m*x0 would need -1.
+    # The latest-legal cut is m2's deepest operand: m (level 0).
+    ops = [FheOp(0, "input", (), {"slot": 0}),
+           FheOp(1, "input", (), {"slot": 1}),
+           FheOp(2, "hmul", (0, 1), {}),
+           FheOp(3, "hmul", (2, 0), {})]
+    t = FheTrace(ops, inputs=[0, 1], outputs=[3], consts=[])
+    rep = verify_trace(t, start_level=1)
+    budget = [f for f in rep.findings if f.rule == "T-BUDGET"]
+    assert len(budget) == 1          # earliest failure only, no cascade
+    assert budget[0].op_idx == 3
+    assert "value 2 (level 0)" in budget[0].hint
+
+
+# ---------------------------------------------------------------------------
+# verify-on-miss in the compile cache
+# ---------------------------------------------------------------------------
+
+def test_compile_cache_verify_on_miss_clean(art):
+    cache = CompileCache(verify=True)
+    sched = cache.get_schedule(
+        art.trace, art.params, art.mem,
+        pass_config=PassConfig(start_level=art.start_level))
+    assert sched.verify_report.ok
+    assert getattr(sched, "_verify_wall_s", 0) > 0
+    assert cache.metrics.counters.get("verify_errors", 0) == 0
+
+
+def test_compile_cache_verify_on_miss_rejects_bad_mapper(art):
+    from repro.core.pipeline import generate_load_save_pipeline
+
+    def broken_mapper(trace, params, mem, **kw):
+        sched = generate_load_save_pipeline(trace, params, mem, **kw)
+        sched.stages[0].ops.pop()            # S-COVER violation
+        return sched
+
+    cache = CompileCache(verify=True)
+    with pytest.raises(VerificationError) as ei:
+        cache.get_schedule(art.trace, art.params, art.mem,
+                           mapper=broken_mapper,
+                           pass_config=PassConfig(
+                               start_level=art.start_level))
+    assert "S-COVER" in ei.value.report.rule_ids()
+    assert cache.metrics.counters.get("verify_errors", 0) > 0
+
+
+def test_pim_backend_verify_rejects_hazardous_program(art, monkeypatch):
+    """PimBackend(verify=True) hazard-analyzes freshly lowered streams;
+    a lowering that drops a STORE raises before it can execute."""
+    import repro.pim.backend as pb
+    from repro.analysis.mutate import clone_program
+
+    be = pb.PimBackend(arch=art.arch, verify=True)
+    prog = be.program_for(art.schedule)      # clean: lowers and verifies
+    assert len(prog.instrs) > 0 and be.verify_wall_s > 0
+
+    real = pb.lower_schedule
+
+    def bad_lower(schedule, arch, layout=None):
+        p = clone_program(real(schedule, arch, layout))
+        for k, ins in enumerate(p.instrs):
+            if ins.opcode == "STORE" \
+                    and schedule.stages[ins.stage].out_bytes:
+                del p.instrs[k]
+                return p
+        raise AssertionError("no STORE to drop")
+
+    monkeypatch.setattr(pb, "lower_schedule", bad_lower)
+    be2 = pb.PimBackend(arch=art.arch, verify=True)
+    with pytest.raises(VerificationError) as ei:
+        be2.program_for(art.schedule)
+    assert "M-ORPHAN" in ei.value.report.rule_ids()
+
+
+# ---------------------------------------------------------------------------
+# lint CLI
+# ---------------------------------------------------------------------------
+
+def test_lint_cli_smoke_clean(tmp_path, capsys):
+    out = tmp_path / "lint.jsonl"
+    rc = lint_main(["--smoke", "--workloads", "matvec",
+                    "--presets", "fhemem", "--jsonl", str(out)])
+    assert rc == 0
+    assert "0 errors" in capsys.readouterr().out
+    lines = out.read_text().strip().splitlines()
+    assert lines and all('"artifact"' in ln for ln in lines)
+
+
+def test_lint_cli_prove_all_rules():
+    from repro.analysis.lint import prove
+    assert prove() == []

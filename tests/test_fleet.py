@@ -11,7 +11,7 @@ import pytest
 
 from repro.core.params import test_params as _test_params
 from repro.core.pipeline import MemoryModel
-from repro.fleet import POLICIES, FleetScheduler, Router
+from repro.fleet import POLICIES, FleetScheduler
 from repro.fleet.device import Flight
 from repro.runtime import (BatchPolicy, KeyCache, PipelinedExecutor,
                            Request, RequestStatus)

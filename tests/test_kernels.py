@@ -9,7 +9,6 @@ from _hyp import given, settings, st  # noqa: E402  (skips per-test)
 
 from repro.core.params import find_2nth_root, find_ntt_primes
 from repro.kernels import common, ops, ref
-from repro.kernels.ref import FourStepTables
 
 
 PRIMES = [m.value for m in find_ntt_primes(30, 10, 4)]
@@ -198,3 +197,46 @@ def test_ntt_kernel_rejects_non_dividing_blocks(rng):
     a = rng.integers(0, mod.value, size=n, dtype=np.uint64)
     with pytest.raises(ValueError, match="must divide"):
         kern(jnp.asarray(a), interpret=True, block_c=3)
+
+
+# ---------------------------------------------------------------------------
+# Montgomery-constant caching — regression for the eager per-call host
+# work bug class: every wrapper call recomputed the modular inverses
+# (host pow() per prime) and re-uploaded four device arrays outside the
+# jit boundary
+# ---------------------------------------------------------------------------
+
+def test_mont_consts_cached_across_calls():
+    ops._mont_consts.cache_clear()
+    k1 = ops._mont_consts(ops._key(PRIMES[:2]))
+    # same basis via numpy ints must normalize to the same cache entry
+    k2 = ops._mont_consts(ops._key(np.array(PRIMES[:2], dtype=np.uint64)))
+    assert all(a is b for a, b in zip(k1, k2))
+    assert ops._mont_consts.cache_info().hits >= 1
+    # a different basis gets its own entry, not a collision
+    k3 = ops._mont_consts(ops._key(PRIMES[:3]))
+    assert k3[0].shape != k1[0].shape
+
+
+def test_mont_consts_cache_values_exact():
+    q64, q32, qinv, rm = ops._mont_consts(ops._key(PRIMES[:4]))
+    for i, p in enumerate(PRIMES[:4]):
+        assert int(q64[i]) == p and int(q32[i]) == p
+        assert (int(qinv[i]) * p) % (1 << 32) == (1 << 32) - 1
+        assert int(rm[i]) == (1 << 32) % p
+
+
+def test_modmul_exact_after_cache_hit(rng):
+    """Wrapper results stay bit-exact on the cached-constants path."""
+    primes = PRIMES[:2]
+    qs = np.array(primes, dtype=np.uint64)
+    ops._mont_consts.cache_clear()
+    for _ in range(2):          # second iteration runs on a cache hit
+        a = rng.integers(0, 2**31, size=(2, 64), dtype=np.uint64) % qs[:, None]
+        b = rng.integers(0, 2**31, size=(2, 64), dtype=np.uint64) % qs[:, None]
+        got = ops.modmul(jnp.asarray(a), jnp.asarray(b), primes,
+                         interpret=True)
+        want = ref.modmul_ref(jnp.asarray(a), jnp.asarray(b),
+                              jnp.asarray(qs))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert ops._mont_consts.cache_info().currsize == 1

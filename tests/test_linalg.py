@@ -1,6 +1,5 @@
 """Homomorphic linear algebra: hoisting, BSGS matvec, polynomial eval."""
 import numpy as np
-import pytest
 
 from repro.core import linalg, ops
 from repro.core.ciphertext import Plaintext

@@ -31,7 +31,7 @@ from repro.obs import (JsonEventLog, Tracer, critical_path, request_chain,
                        write_trace)
 from repro.fleet import FleetScheduler
 from repro.pim.isa import OPCODES
-from repro.runtime import BatchPolicy, KeyCache, PipelinedExecutor
+from repro.runtime import BatchPolicy
 from repro.runtime.metrics import LatencyStats, MetricsRegistry
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden",

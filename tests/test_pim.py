@@ -8,7 +8,6 @@ top of that, layout/lowering structural invariants run both as fixed
 deterministic cases and as hypothesis properties (skipped without
 hypothesis via tests/_hyp.py).
 """
-import math
 
 import pytest
 

@@ -5,7 +5,6 @@ import os
 import time
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
@@ -132,7 +131,6 @@ def test_synthetic_data_deterministic():
 def test_compressed_psum_single_pod():
     """n_pod=1 degenerate case runs on one device; error feedback carries
     the quantization residual."""
-    from jax.sharding import Mesh
     from repro.train.compress import (compressed_pod_mean,
                                       init_error_feedback)
     from repro.compat import make_mesh as _make_mesh

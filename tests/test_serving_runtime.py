@@ -7,7 +7,7 @@ import pytest
 
 from repro.core.params import test_params as _test_params
 from repro.core.pipeline import MemoryModel
-from repro.runtime import (AnalyticBackend, BatchPolicy, KeyCache,
+from repro.runtime import (BatchPolicy, KeyCache,
                            PipelinedExecutor, Request, RequestStatus,
                            SlotBatcher)
 from repro.runtime.batcher import pack_slot_groups
