@@ -14,7 +14,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 MODULES = ["fig1_bandwidth", "fig12_workloads", "fig13_breakdown",
            "fig14_kernels", "fig15_ablations", "fig16_serving",
            "fig17_compiler", "fig18_calibration", "fig19_pim",
-           "fig20_fleet", "fig21_trace"]
+           "fig20_fleet", "fig21_trace", "fig22_utilization"]
 
 
 def main() -> None:

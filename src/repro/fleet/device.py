@@ -146,6 +146,7 @@ class Device:
         self.policy = policy
         self.metrics = metrics
         self.queue = AdmissionQueue(max_depth_per_tenant, metrics)
+        self.queue.owner = str(device_id)   # queue-depth series label
         self.batcher = SlotBatcher(self.queue, self.policy, metrics)
         self.key_cache = key_cache
         if key_cache is not None:
@@ -239,6 +240,10 @@ class Device:
         if self._atomic_in_service:
             # completions were recorded at dispatch; just free the slot
             self._atomic_in_service = False
+            tel = self.metrics.telemetry
+            if tel is not None:
+                tel.gauge("fhe_device_inflight_occupancy",
+                          device=self.device_id).set(now, 0.0)
             progressed = True
         if self.flight is not None:
             self._flight_boundary(now)
@@ -254,6 +259,7 @@ class Device:
                      workloads: Dict[str, object]) -> None:
         trace = workloads[batch.workload].trace
         tr = self.metrics.tracer
+        tel = self.metrics.telemetry
         track = f"device:{self.device_id}"
         bspan = obs = None
         if tr is not None:
@@ -262,7 +268,17 @@ class Device:
                              n_requests=len(batch.requests),
                              n_ciphertexts=batch.n_ciphertexts,
                              device=self.device_id)
+        if tr is not None or tel is not None:
+            # telemetry alone still needs the DES timeline origin
+            # threaded into round_seconds; spans stay off
             obs = ExecObs(tr, bspan, now, track)
+        if tel is not None:
+            tel.gauge("fhe_device_queue_depth",
+                      device=self.device_id).set(now, len(self.queue))
+            tel.gauge("fhe_device_inflight_occupancy",
+                      device=self.device_id).set(
+                          now, batch.n_ciphertexts
+                          / max(1, self.policy.max_batch))
         sched = self.schedule_for(batch.workload, trace, obs=obs)
         stepped = ((self.continuous_batching or self.preempt)
                    and hasattr(self.backend, "round_seconds")
@@ -292,6 +308,15 @@ class Device:
 
     def _begin_step(self, now: float) -> None:
         f = self.flight
+        tel = self.metrics.telemetry
+        if tel is not None:
+            # in-flight occupancy at every round boundary: the stepped
+            # path's membership changes between rounds (refill /
+            # completion), which is exactly what this series shows
+            tel.gauge("fhe_device_inflight_occupancy",
+                      device=self.device_id).set(
+                          now, f.occupancy
+                          / max(1, self.policy.max_batch))
         dt = self.backend.round_seconds(
             f.schedule, f.schedule.rounds[f.cursor], f.occupancy,
             key_cache=self.key_cache, metrics=self.metrics,
@@ -307,11 +332,15 @@ class Device:
         slot rows, or issue the next round-step."""
         f = self.flight
         tr, log = self.metrics.tracer, self.metrics.event_log
+        tel = self.metrics.telemetry
         f.finish_step(now, self.metrics)
         if not f.members:
             self.metrics.batch_service.observe(f.total_service)
             if tr is not None and f.span is not None:
                 tr.end(f.span, now, n_refills=f.n_refills)
+            if tel is not None:
+                tel.gauge("fhe_device_inflight_occupancy",
+                          device=self.device_id).set(now, 0.0)
             self.flight = None
             return
         if self.preempt and f.best_effort() and f.min_rounds_left() > 1 \
@@ -338,6 +367,9 @@ class Device:
             if log is not None:
                 for r in evicted:
                     log.emit("preempted", now, r, device=self.device_id)
+            if tel is not None:
+                tel.gauge("fhe_device_inflight_occupancy",
+                          device=self.device_id).set(now, 0.0)
             self.flight = None
             return
         if self.continuous_batching:

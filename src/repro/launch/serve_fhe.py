@@ -243,6 +243,13 @@ def main() -> None:
                          "(load in https://ui.perfetto.dev or "
                          "chrome://tracing); one track per device, one "
                          "per tenant")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="sample time-series telemetry (repro.obs."
+                         "telemetry: per-bank PIM utilization, queue "
+                         "depths, goodput, SLO burn rates) during the "
+                         "serve and write an OpenMetrics/Prometheus "
+                         "exposition here (self-validated; inspect "
+                         "with any promtool-compatible reader)")
     ap.add_argument("--log-json", action="store_true",
                     help="emit one JSON line per request lifecycle "
                          "event (accepted/routed/preempted/completed/"
@@ -334,6 +341,14 @@ def main() -> None:
     if args.log_json:
         from repro.obs import JsonEventLog
         ex.metrics.event_log = JsonEventLog(sys.stdout)
+    telemetry = None
+    if args.metrics_out:
+        from repro.obs import SloBurnRate, Telemetry
+        wall = args.backend in ("mesh", "ciphertext")
+        telemetry = ex.metrics.telemetry = Telemetry(
+            clock="wall" if wall else "virtual")
+        if args.deadline_ms > 0:
+            ex.metrics.slo = SloBurnRate()
     m = ex.serve(arrivals)
     print(m.format_table())
     if args.verify:
@@ -358,9 +373,23 @@ def main() -> None:
         from repro.obs import write_trace
         wall = args.backend in ("mesh", "ciphertext")
         obj = write_trace(tracer.store, args.trace_out,
-                          clock="wall" if wall else "virtual")
+                          clock="wall" if wall else "virtual",
+                          telemetry=telemetry)
         print(f"trace: {len(tracer.store)} spans "
-              f"({len(obj['traceEvents'])} events) -> {args.trace_out}")
+              f"({len(obj['traceEvents'])} events"
+              + (f", {len(telemetry)} counter tracks"
+                 if telemetry is not None else "")
+              + f") -> {args.trace_out}")
+    if telemetry is not None:
+        from repro.obs import parse_openmetrics, write_metrics
+        text = write_metrics(args.metrics_out, telemetry, ex.metrics)
+        n = len(parse_openmetrics(text)[0])
+        slo = ex.metrics.slo
+        slo_tag = (f", {len(slo.alerts)} SLO alert(s)"
+                   if slo is not None else "")
+        print(f"metrics: {len(telemetry)} series "
+              f"({telemetry.n_points()} points, {n} samples, "
+              f"{telemetry.clock} clock{slo_tag}) -> {args.metrics_out}")
 
     if args.backend == "ciphertext":
         tol = (ex.devices[0].backend if args.fleet > 0

@@ -15,6 +15,11 @@ Absence of a tracer is the disabled state — every emission site in the
 runtime guards on ``metrics.tracer is None``, so a run without one is
 bit-for-bit identical to a build without this package (regression-
 tested against a metrics golden).
+
+Time-series telemetry (repro.obs.telemetry) rides the same contract on
+``metrics.telemetry``: bounded counter/gauge/histogram series on the
+caller's clock, exported as OpenMetrics text (repro.obs.openmetrics)
+or Perfetto counter tracks merged into the trace JSON.
 """
 from repro.obs.span import Span, SpanStore
 from repro.obs.tracer import ExecObs, Tracer
@@ -23,9 +28,16 @@ from repro.obs.perfetto import (to_trace_events, validate, validate_file,
                                 write_trace)
 from repro.obs.critical_path import (Segment, critical_path, request_chain,
                                      workload_breakdown)
+from repro.obs.telemetry import (HistogramSeries, Series, SloBurnRate,
+                                 Telemetry)
+from repro.obs.openmetrics import render as render_openmetrics
+from repro.obs.openmetrics import parse as parse_openmetrics
+from repro.obs.openmetrics import write_metrics
 
 __all__ = [
     "Span", "SpanStore", "Tracer", "ExecObs", "JsonEventLog", "EVENTS",
     "to_trace_events", "write_trace", "validate", "validate_file",
     "Segment", "critical_path", "request_chain", "workload_breakdown",
+    "Telemetry", "Series", "HistogramSeries", "SloBurnRate",
+    "render_openmetrics", "parse_openmetrics", "write_metrics",
 ]

@@ -12,6 +12,9 @@ Events and their emitters:
 * ``preempted``                 — flight eviction at a round boundary
 * ``completed`` / ``deadline_miss`` — request left the system
 * ``dropped``                   — expired at dequeue, never served
+* ``slo_alert`` / ``slo_recovered`` — burn-rate monitor transitions
+                                  (repro.obs.telemetry.SloBurnRate);
+                                  no request in scope
 
 Every record carries ``ts`` (timeline seconds — virtual or wall,
 matching the backend's clock), ``event``, and, when a request is in
@@ -30,7 +33,7 @@ from typing import IO
 # the runtime package from obs (see tracer.py)
 
 EVENTS = ("accepted", "rejected", "routed", "preempted", "completed",
-          "deadline_miss", "dropped")
+          "deadline_miss", "dropped", "slo_alert", "slo_recovered")
 
 
 class JsonEventLog:

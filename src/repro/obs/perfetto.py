@@ -10,7 +10,11 @@ as:
                      flight / compile / round / stage spans;
 * ``tenant:<t>``  -> pid 2 ("tenants"),  one tid per tenant — request
                      roots with queue_wait / route / service children;
-* anything else   -> pid 3 ("runtime").
+* anything else   -> pid 3 ("runtime");
+* telemetry       -> pid 4 ("telemetry"), counter tracks (``ph:"C"``)
+                     merged from a `Telemetry` snapshot — one stepped
+                     graph per labeled series (bank utilization, queue
+                     depth, burn rate ...).
 
 Timestamps are the serving timeline (virtual DES or wall seconds)
 converted to microseconds — Perfetto renders either; the clock domain
@@ -49,9 +53,36 @@ def _jsonable(v):
     return repr(v)
 
 
-def to_trace_events(store: SpanStore, clock: str = "virtual") -> dict:
+_TELEMETRY_PID = 4
+
+
+def _counter_events(telemetry) -> List[dict]:
+    """Perfetto counter-track (``ph:"C"``) events from a telemetry
+    snapshot: one track per labeled series, one event per retained
+    point, so utilization / queue depth / burn rate render as stepped
+    graphs above the span tracks. Histograms export their observation
+    count (the time-resolved part of a histogram series)."""
+    events: List[dict] = [
+        {"ph": "M", "name": "process_name", "pid": _TELEMETRY_PID,
+         "tid": 0, "args": {"name": "telemetry"}}]
+    for tid, s in enumerate(telemetry.series(), start=1):
+        label = s.name + "".join(f"[{k}={v}]" for k, v in s.labels)
+        events.append({"ph": "M", "name": "thread_name",
+                       "pid": _TELEMETRY_PID, "tid": tid,
+                       "args": {"name": label}})
+        for t, v in s.points:
+            events.append({"ph": "C", "name": label,
+                           "pid": _TELEMETRY_PID, "tid": tid,
+                           "ts": t * 1e6, "args": {"value": v}})
+    return events
+
+
+def to_trace_events(store: SpanStore, clock: str = "virtual",
+                    telemetry=None) -> dict:
     """Serialize every (closed) span; open spans are exported with zero
-    duration and ``status: open`` so a crash dump still loads."""
+    duration and ``status: open`` so a crash dump still loads. With
+    ``telemetry`` (repro.obs.Telemetry), its series are merged in as
+    counter tracks under a dedicated "telemetry" process."""
     tids: Dict[str, int] = {}
     events: List[dict] = []
     seen_procs = set()
@@ -81,14 +112,18 @@ def to_trace_events(store: SpanStore, clock: str = "virtual") -> dict:
             "ts": s.start_s * 1e6, "dur": (end - s.start_s) * 1e6,
             "args": args,
         })
+    other = {"generator": "repro.obs", "clock": clock,
+             "n_spans": len(store.spans)}
+    if telemetry is not None:
+        events.extend(_counter_events(telemetry))
+        other["n_series"] = len(telemetry)
     return {"traceEvents": events, "displayTimeUnit": "ms",
-            "otherData": {"generator": "repro.obs", "clock": clock,
-                          "n_spans": len(store.spans)}}
+            "otherData": other}
 
 
 def write_trace(store: SpanStore, path: str,
-                clock: str = "virtual") -> dict:
-    obj = to_trace_events(store, clock=clock)
+                clock: str = "virtual", telemetry=None) -> dict:
+    obj = to_trace_events(store, clock=clock, telemetry=telemetry)
     with open(path, "w") as f:
         json.dump(obj, f)
     return obj
@@ -113,7 +148,7 @@ def validate(obj) -> List[str]:
             errs.append(f"{where}: not an object")
             continue
         ph = ev.get("ph")
-        if ph not in ("X", "M", "i", "B", "E"):
+        if ph not in ("X", "M", "i", "B", "E", "C"):
             errs.append(f"{where}: bad ph {ph!r}")
             continue
         if not isinstance(ev.get("name"), str) or not ev["name"]:
@@ -130,6 +165,15 @@ def validate(obj) -> List[str]:
             if not isinstance(dur, (int, float)) or (
                     isinstance(dur, (int, float)) and dur < 0):
                 errs.append(f"{where}: X event needs dur >= 0")
+        if ph == "C":
+            if not isinstance(ev.get("ts"), (int, float)):
+                errs.append(f"{where}: C event missing numeric ts")
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                    isinstance(v, (int, float)) and
+                    not isinstance(v, bool) for v in args.values()):
+                errs.append(f"{where}: C event args must be a non-empty "
+                            f"object of numeric counter values")
         if len(errs) >= 20:
             errs.append("... (truncated)")
             break

@@ -112,8 +112,14 @@ class Tracer:
 
 
 class ExecObs(NamedTuple):
-    """Execution-scope observability context handed into backends."""
-    tracer: Tracer
+    """Execution-scope observability context handed into backends.
+
+    ``tracer`` may be None when only telemetry (metrics.telemetry) is
+    armed: the backend still needs the timeline origin ``t0`` to stamp
+    its series points, so callers construct an ExecObs whenever EITHER
+    observer is attached and backends guard span emission on
+    ``obs.tracer is not None``."""
+    tracer: Optional[Tracer]
     parent: Optional[int]      # the batch/flight span
     t0: float                  # timeline time execution starts
     track: str                 # device track, e.g. "device:0"

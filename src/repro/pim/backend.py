@@ -84,11 +84,15 @@ class PimBackend:
         continuous-batching path steps (same contract as
         AnalyticBackend.round_seconds).
 
-        With ``obs`` (repro.obs.ExecObs) the round emits a ``round``
-        span plus per-stage ``stage`` spans attributed all the way down
-        to the lowered ISA: per instruction-class (LOAD/ROWOP/NTT/
-        XFER/STORE) and per-bank cycle counts from the instruction
-        stream — the trace-view analogue of fig19's breakdown."""
+        With ``obs`` (repro.obs.ExecObs) carrying a tracer, the round
+        emits a ``round`` span plus per-stage ``stage`` spans
+        attributed all the way down to the lowered ISA: per
+        instruction-class (LOAD/ROWOP/NTT/XFER/STORE) and per-bank
+        cycle counts from the instruction stream — the trace-view
+        analogue of fig19's breakdown. With ``metrics.telemetry``
+        armed (obs supplies the timeline origin even when its tracer
+        is None), the round also steps the bank-utilization and
+        movement-bandwidth time series (`_emit_telemetry`)."""
         prog = self.program_for(schedule)
         round_times = []
         rows = []
@@ -113,7 +117,11 @@ class PimBackend:
                 breakdown.append(row)
         worst = max(t[0] for t in round_times)
         fill = sum(max(e, x) / b for (_, e, x) in round_times)
-        if obs is not None:
+        tel = metrics.telemetry
+        if tel is not None and obs is not None:
+            self._emit_telemetry(tel, prog, rnd, rows, b,
+                                 obs.t0, worst + fill)
+        if obs is not None and obs.tracer is not None:
             rspan = obs.tracer.begin("round", obs.t0, parent=obs.parent,
                                      track=obs.track, n_stages=len(rnd),
                                      b=b)
@@ -129,6 +137,47 @@ class PimBackend:
                                  prog.stage_bank_cycles(st.idx).items()})
             obs.tracer.end(rspan, obs.t0 + worst + fill)
         return worst + fill
+
+    @staticmethod
+    def stage_phase(prog: PimProgram, stage: int) -> str:
+        """Dominant ISA class of a lowered stage — the ``phase`` label
+        on the utilization series ("what was the fabric doing"):
+        ntt / modmul / move / load by argmax cycle share."""
+        cls = prog.stage_class_cycles(stage)
+        groups = (("ntt", cls["NTT"]), ("modmul", cls["ROWOP"]),
+                  ("move", cls["XFER"] + cls["STORE"]),
+                  ("load", cls["LOAD"]))
+        return max(groups, key=lambda kv: kv[1])[0]
+
+    def _emit_telemetry(self, tel, prog: PimProgram, rnd, rows,
+                        b: int, t0: float, round_s: float) -> None:
+        """Per-round series points, stamped at the round's end on the
+        DES timeline: per-bank busy seconds/cycles and utilization
+        (busy over the round's wall — strictly < 1 whenever any other
+        stage contributes fill), and per-scope movement bytes
+        normalized against the arch's peak link bandwidth so presets
+        are directly comparable."""
+        t_end = t0 + round_s
+        arch = self.arch
+        for st, row in zip(rnd, rows):
+            ch, bk = arch.bank_coords(st.partition)
+            phase = self.stage_phase(prog, st.idx)
+            cls = prog.stage_class_cycles(st.idx)
+            exec_cycles = b * (cls["ROWOP"] + cls["NTT"] + cls["XFER"]
+                               + cls["STORE"])
+            tel.counter("fhe_pim_bank_busy_seconds",
+                        channel=ch, bank=bk).inc(t_end, row["busy_s"])
+            tel.counter("fhe_pim_bank_busy_cycles", channel=ch, bank=bk,
+                        phase=phase).inc(t_end, exec_cycles)
+            tel.gauge("fhe_pim_bank_utilization", channel=ch, bank=bk,
+                      phase=phase).set(t_end, row["busy_s"] / round_s)
+            for scope, nbytes in sorted(
+                    prog.stage_scope_bytes(st.idx).items()):
+                moved = b * nbytes
+                tel.counter("fhe_pim_move_bytes", scope=scope).inc(
+                    t_end, moved)
+                tel.gauge("fhe_pim_move_bw_frac", scope=scope).set(
+                    t_end, (moved / round_s) / arch.scope_bw(scope))
 
     def execute(self, schedule: PipelineSchedule, batch, *,
                 key_cache, metrics, workload: str, obs=None) -> float:

@@ -108,6 +108,23 @@ class PimProgram:
         self._class_index()
         return dict(self._by_bank[stage])
 
+    def stage_scope_bytes(self, stage: int) -> Dict[str, int]:
+        """Bytes MOVED per interconnect scope in one stage — XFER plus
+        STORE traffic ({scope: bytes}; constant LOAD streaming is a
+        separate phenomenon and deliberately excluded). This is the
+        movement side of the telemetry's bandwidth series: bytes here
+        over the round's wall time, normalized by `PimArch.scope_bw`,
+        is the link's utilization fraction."""
+        if getattr(self, "_by_scope", None) is None:
+            by_scope: List[Dict[str, int]] = [
+                {} for _ in range(self.n_stages)]
+            for i in self.instrs:
+                if i.opcode in ("XFER", "STORE") and i.nbytes:
+                    d = by_scope[i.stage]
+                    d[i.scope] = d.get(i.scope, 0) + i.nbytes
+            self._by_scope = by_scope
+        return dict(self._by_scope[stage])
+
     def _class_index(self) -> None:
         if getattr(self, "_by_class", None) is None:
             by_class = [{op: 0.0 for op in OPCODES}

@@ -125,3 +125,20 @@ def lower_schedule(schedule: PipelineSchedule, arch: PimArch,
                 cycles=arch.xfer_seconds(st.out_bytes, scope) * f))
 
     return PimProgram(arch.name, f, instrs, len(stages))
+
+
+def program_movement_profile(prog: PimProgram,
+                             arch: PimArch) -> List[dict]:
+    """Static movement profile of a lowered stream: per interconnect
+    scope, the total XFER+STORE bytes and the seconds the arch's peak
+    link bandwidth would need for them — the lowering-time counterpart
+    of the runtime telemetry's ``fhe_pim_move_bytes`` /
+    ``fhe_pim_move_bw_frac`` series (fig22 reports both sides)."""
+    by_scope = {}
+    for stage in range(prog.n_stages):
+        for scope, nbytes in prog.stage_scope_bytes(stage).items():
+            by_scope[scope] = by_scope.get(scope, 0) + nbytes
+    return [{"scope": scope, "bytes": nbytes,
+             "peak_bw": arch.scope_bw(scope),
+             "seconds_at_peak": nbytes / arch.scope_bw(scope)}
+            for scope, nbytes in sorted(by_scope.items())]

@@ -242,7 +242,19 @@ class CiphertextBackend:
             stats[st.idx].add(sec)
             metrics.occupancy.add(st.partition, sec)
 
-        if obs is not None:
+        tel = metrics.telemetry
+        if tel is not None and obs is not None:
+            # wall-clock series (this backend's clock domain): measured
+            # per-stage seconds laid end to end after the pack window,
+            # mirroring the span decomposition below
+            at = obs.t0 + t_pack
+            for st, sec in zip(schedule.stages, stage_s):
+                at += sec
+                tel.counter("fhe_partition_busy_seconds",
+                            partition=st.partition).inc(at, sec)
+                tel.histogram("fhe_stage_wall_seconds",
+                              stage=st.idx).observe(at, sec)
+        if obs is not None and obs.tracer is not None:
             # wall-clock decomposition: pack+encrypt, then the measured
             # per-stage execution laid end to end
             tr, t = obs.tracer, obs.t0

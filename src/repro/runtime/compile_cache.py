@@ -141,7 +141,7 @@ class CompileCache:
             sched._compile_wall_s = time.perf_counter() - t0
             self._cache[key] = sched
         sched = self._cache[key]
-        if obs is not None:
+        if obs is not None and obs.tracer is not None:
             c = obs.tracer.instant(
                 "compile", obs.t0, parent=obs.parent, track=obs.track,
                 hit=hit, wall_s=0.0 if hit

@@ -95,7 +95,17 @@ class AnalyticBackend:
         # bounds the steady state, plus pipeline fill
         worst = max(t[0] for t in round_times)
         fill = sum(max(c, t) / b for (_, c, t) in round_times)
-        if obs is not None:
+        tel = metrics.telemetry
+        if tel is not None and obs is not None:
+            round_s = worst + fill
+            t_end = obs.t0 + round_s
+            for st, (busy, _, _) in zip(rnd, round_times):
+                tel.counter("fhe_partition_busy_seconds",
+                            partition=st.partition).inc(t_end, busy)
+                tel.gauge("fhe_partition_utilization",
+                          partition=st.partition).set(
+                              t_end, busy / round_s)
+        if obs is not None and obs.tracer is not None:
             # stages of one round run pipelined, so their spans share
             # the round's start and nest by containment in the viewer
             rspan = obs.tracer.begin("round", obs.t0, parent=obs.parent,
@@ -244,7 +254,7 @@ class MeshBackend:
         for st in schedule.stages:
             metrics.occupancy.add(st.partition, dt / n_rounds)
         batch.outputs = out
-        if obs is not None:
+        if obs is not None and obs.tracer is not None:
             # the mesh measures one fused XLA dispatch — no per-stage
             # decomposition, so a single execute span carries the total
             obs.tracer.span("xla_execute", obs.t0, obs.t0 + dt,
@@ -274,6 +284,19 @@ def record_request_completion(metrics: MetricsRegistry, r: Request,
     r.service_start_s = service_start_s
     metrics.incr("requests_served")
     tr, log = metrics.tracer, metrics.event_log
+    tel, slo = metrics.telemetry, metrics.slo
+    missed = r.deadline_s is not None and done > r.deadline_s
+    if tel is not None:
+        tel.counter("fhe_requests_finished",
+                    status="deadline_miss" if missed
+                    else "completed").inc(done)
+        if r.deadline_s is not None and not missed:
+            tel.counter("fhe_goodput_requests").inc(done)
+    if slo is not None and r.deadline_s is not None:
+        # the burn-rate monitor only sees SLO-bearing outcomes:
+        # best-effort completions can't miss and must not dilute the
+        # miss rate
+        slo.record(done, missed, metrics)
     if tr is not None:
         root = tr.ensure_root(r)
         track = f"tenant:{r.tenant}"
@@ -469,14 +492,20 @@ class PipelinedExecutor:
         return time.perf_counter() - t0
 
     def _execute_batch(self, batch: Batch, now: float) -> float:
-        tr = self.metrics.tracer
+        tr, tel = self.metrics.tracer, self.metrics.telemetry
         bspan = obs = None
         if tr is not None:
             bspan = tr.begin(f"batch:{batch.workload}", now,
                              track="device:0", workload=batch.workload,
                              n_requests=len(batch.requests),
                              n_ciphertexts=batch.n_ciphertexts)
+        if tr is not None or tel is not None:
+            # telemetry alone still needs the timeline origin threaded
+            # into the backend (ExecObs.t0); span emission stays off
             obs = ExecObs(tr, bspan, now, "device:0")
+        if tel is not None:
+            tel.gauge("fhe_device_queue_depth",
+                      device=self.queue.owner).set(now, len(self.queue))
         sched = self.compile_cache.get_schedule(
             self.workloads[batch.workload].trace, self.params, self.mem,
             self.mapper, pass_config=self.pass_config, obs=obs)

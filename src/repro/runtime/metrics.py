@@ -9,7 +9,7 @@ from __future__ import annotations
 import dataclasses
 import random
 import zlib
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 class LatencyStats:
@@ -128,6 +128,26 @@ class PartitionOccupancy:
         occ = self.occupancy(elapsed_s)
         return sum(occ) / len(occ) if occ else 0.0
 
+    def utilization(self, elapsed_s: float) -> List[float]:
+        """Uncapped busy/wall fraction per partition — unlike
+        `occupancy` this keeps values > 1.0 visible (a partition billed
+        more busy-seconds than the wall window is oversubscribed, the
+        signal the capped column hides)."""
+        if elapsed_s <= 0:
+            return [0.0] * self.n_partitions
+        return [b / elapsed_s for b in self.busy_s]
+
+    def active_utilization(self, elapsed_s: float) -> Tuple[float, float,
+                                                            int]:
+        """(mean, max, n_active) of busy/wall over partitions that did
+        ANY work — the table-facing normalization: averaging the idle
+        tail of a 128-bank arch into the mean made the column
+        meaningless across backends with different partition counts."""
+        util = [u for u in self.utilization(elapsed_s) if u > 0.0]
+        if not util:
+            return 0.0, 0.0, 0
+        return sum(util) / len(util), max(util), len(util)
+
 
 class MetricsRegistry:
     """One object threaded through queue/batcher/keycache/executor —
@@ -169,6 +189,8 @@ class MetricsRegistry:
         # that down. Deliberately NOT part of summary().
         self.tracer = None            # Optional[repro.obs.Tracer]
         self.event_log = None         # Optional[repro.obs.JsonEventLog]
+        self.telemetry = None         # Optional[repro.obs.Telemetry]
+        self.slo = None               # Optional[repro.obs.SloBurnRate]
 
     def observe_decrypt_error(self, workload: str, err: float) -> None:
         prev = self.decrypt_error.get(workload, 0.0)
@@ -251,8 +273,16 @@ class MetricsRegistry:
             f"service time p99      {self.service_time.p99*1e3:.2f} ms",
             f"keycache hit rate     {s['keycache_hit_rate']*100:.1f} %",
             f"compile hit rate      {s['compile_cache_hit_rate']*100:.1f} %",
-            f"partition occupancy   {s['mean_partition_occupancy']*100:.1f} %",
         ]
+        # partition utilization normalized busy/wall over partitions
+        # that did work (raw busy-seconds averaged over every partition
+        # of the arch — including the idle tail — made the column
+        # incomparable between the 4-partition smoke model and a
+        # 128-bank pim preset)
+        mu, mx, n_act = self.occupancy.active_utilization(s["elapsed_s"])
+        lines.append(f"partition util        {mu*100:.1f} % mean / "
+                     f"{mx*100:.1f} % max "
+                     f"({n_act}/{self.occupancy.n_partitions} active)")
         if self.count("requests_goodput"):
             lines.insert(2, f"goodput               "
                             f"{s['goodput_rps']:.1f} req/s")
@@ -271,3 +301,73 @@ class MetricsRegistry:
             if miss:
                 lines.append(f"deadline misses {t:<6} {miss}")
         return "\n".join(lines)
+
+
+class TelemetryHub:
+    """Fleet-wide view over the run's shared telemetry
+    (repro.obs.Telemetry — duck-typed here, as with the tracer, so the
+    accumulator module never imports the obs package).
+
+    Devices emit their series into ONE Telemetry with a ``device``
+    label (the registry is already the fleet-wide scoreboard), so
+    aggregation is a query, not a merge protocol: ``aggregate`` folds
+    every series of a name across its label sets into one series
+    sampled at the union of their timestamps, step-interpolating each
+    input (a counter holds its last cumulative total between points;
+    0 before its first) — the "whole-fleet queue depth" / "total
+    goodput" view the per-device series can't show individually."""
+
+    AGGS = ("sum", "mean", "max")
+
+    def __init__(self, telemetry):
+        self.telemetry = telemetry
+
+    def group(self, name: str, label: str = "device") -> Dict[str, list]:
+        """Series of ``name`` bucketed by one label's value (series
+        without the label land under "")."""
+        out: Dict[str, list] = {}
+        for s in self.telemetry.find(name):
+            out.setdefault(dict(s.labels).get(label, ""), []).append(s)
+        return out
+
+    def aggregate(self, name: str, agg: str = "sum",
+                  label: Optional[str] = None,
+                  value: Optional[str] = None) -> List[Tuple[float,
+                                                             float]]:
+        """Fold all series named ``name`` (optionally only those whose
+        ``label`` equals ``value``) into [(t, aggregated)] samples."""
+        if agg not in self.AGGS:
+            raise ValueError(f"agg must be one of {self.AGGS}")
+        series = self.telemetry.find(name)
+        if label is not None:
+            series = [s for s in series
+                      if dict(s.labels).get(label) == str(value)]
+        series = [s for s in series if s.points]
+        if not series:
+            return []
+        ts = sorted({t for s in series for t, _ in s.points})
+        out = []
+        for t in ts:
+            vals = []
+            for s in series:
+                if s.points[0][0] > t:
+                    # not yet emitting: a counter contributes 0 to a
+                    # sum; gauges are excluded (no level exists yet)
+                    if s.kind == "counter" and agg == "sum":
+                        vals.append(0.0)
+                    continue
+                vals.append(s.value_at(t))
+            if not vals:
+                continue
+            if agg == "sum":
+                out.append((t, sum(vals)))
+            elif agg == "max":
+                out.append((t, max(vals)))
+            else:
+                out.append((t, sum(vals) / len(vals)))
+        return out
+
+    def totals(self, name: str) -> Dict[str, float]:
+        """Final value per label set — {rendered labels: value}."""
+        return {",".join(f"{k}={v}" for k, v in s.labels): s.value
+                for s in self.telemetry.find(name)}

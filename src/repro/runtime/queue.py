@@ -62,6 +62,10 @@ class AdmissionQueue:
         self.max_depth = max_depth_per_tenant
         self.queues: Dict[str, Deque[Request]] = {}
         self.metrics = metrics or MetricsRegistry()
+        # telemetry label for the queue-depth series: the fleet sets
+        # this to the owning device id (Device ctor); "0" is the
+        # single-executor door
+        self.owner = "0"
         self._rr = itertools.count()     # tenant rotation cursor
         self._id = itertools.count()
 
@@ -94,6 +98,10 @@ class AdmissionQueue:
         if log is not None:
             log.emit("accepted", req.arrival_s, req,
                      queue_depth=len(q))
+        tel = self.metrics.telemetry
+        if tel is not None:
+            tel.gauge("fhe_device_queue_depth", device=self.owner).set(
+                req.arrival_s, len(self))
         return True
 
     # -- dequeue -------------------------------------------------------------
@@ -107,6 +115,7 @@ class AdmissionQueue:
         if not any(r.expired(now) for r in q):
             return
         tr, log = self.metrics.tracer, self.metrics.event_log
+        tel, slo = self.metrics.telemetry, self.metrics.slo
         live = []
         for r in q:
             if r.expired(now):
@@ -118,10 +127,20 @@ class AdmissionQueue:
                     tr.close_root(r, now, "dropped_expired")
                 if log is not None:
                     log.emit("dropped", now, r)
+                if tel is not None:
+                    tel.counter("fhe_requests_finished",
+                                status="dropped_expired").inc(now)
+                if slo is not None:
+                    # a drop is a miss the service loop never sees —
+                    # it must still burn the error budget
+                    slo.record(now, True, self.metrics)
             else:
                 live.append(r)
         q.clear()
         q.extend(live)
+        if tel is not None:
+            tel.gauge("fhe_device_queue_depth", device=self.owner).set(
+                now, len(self))
 
     def oldest_arrival(self, now: float,
                        workload: Optional[str] = None) -> Optional[float]:

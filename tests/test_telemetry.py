@@ -1,0 +1,551 @@
+"""repro.obs telemetry: time-series sampling, SLO burn-rate alerting,
+OpenMetrics / Perfetto export, and the fleet-wide TelemetryHub.
+
+The load-bearing guarantees, in test order:
+
+* **series mechanics** — counters only move up, gauges step, rings
+  bound memory, sub-resolution updates coalesce, histograms keep the
+  Prometheus exposition shape, kind collisions fail loudly;
+* **invisible when detached** — the no-telemetry serve is bit-for-bit
+  the pre-observability golden (tests/golden/metrics_baseline.json),
+  and an armed serve leaves every metric unchanged on the analytic,
+  pim, AND fleet paths;
+* **clock domains** — analytic/pim/fleet series live on the DES
+  virtual timeline (every timestamp inside [0, elapsed]), the
+  ciphertext backend's stage series carry measured wall seconds, and
+  each series declares its domain through to the OpenMetrics export;
+* **cross-check** — the telemetry-derived busy/utilization agrees with
+  the occupancy accumulator (and therefore with the roofline-style
+  busy/wall normalization format_table and report.py render);
+* **SLO burn rate** — fires exactly once on induced overload (instant
+  in the span store + event-log line), stays silent at nominal load,
+  re-arms only after recovery;
+* **export** — OpenMetrics text round-trips through the strict
+  self-parser (and its validator rejects malformed expositions);
+  Perfetto counter tracks merge into the trace JSON and validate;
+* **perf gate** — benchmarks/compare.py exits non-zero on an induced
+  regression between two results directories.
+"""
+import io
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+import tests._obs_scenario as S
+from repro.obs import (JsonEventLog, SloBurnRate, Telemetry, Tracer,
+                       parse_openmetrics, render_openmetrics,
+                       to_trace_events, validate, write_metrics)
+from repro.obs import openmetrics
+from repro.compiler import PassConfig
+from repro.fleet import FleetScheduler
+from repro.runtime import BatchPolicy
+from repro.runtime.metrics import TelemetryHub
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import compare as bench_compare  # noqa: E402
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "metrics_baseline.json")
+
+
+# ---------------------------------------------------------------------------
+# shared runs (module-scoped; each serves the 48-request obs scenario)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def detached():
+    ex, m = S.run_scenario("analytic")
+    return ex, m
+
+
+@pytest.fixture(scope="module")
+def armed():
+    """Analytic serve with tracer + telemetry + event log all armed."""
+    ex = S.build_executor("analytic")
+    ex.metrics.tracer = Tracer()
+    ex.metrics.telemetry = Telemetry(clock="virtual")
+    ex.metrics.event_log = JsonEventLog(io.StringIO())
+    ex.warmup()
+    m = ex.serve(S.make_arrivals(ex))
+    return ex, m
+
+
+@pytest.fixture(scope="module")
+def armed_pim():
+    ex = S.build_executor("pim")
+    ex.metrics.telemetry = Telemetry(clock="virtual")
+    ex.warmup()
+    m = ex.serve(S.make_arrivals(ex))
+    return ex, m
+
+
+@pytest.fixture(scope="module")
+def overload():
+    """Everything offered at once against deadlines shorter than one
+    batch service: a sustained miss storm the burn-rate monitor must
+    page on."""
+    ex = S.build_executor("analytic")
+    ex.metrics.tracer = Tracer()
+    ex.metrics.telemetry = Telemetry(clock="virtual")
+    ex.metrics.event_log = JsonEventLog(io.StringIO())
+    ex.metrics.slo = SloBurnRate(min_events=4)
+    ex.warmup()
+    m = ex.serve(S.make_arrivals(ex, rate_rps=1e9, deadline_s=2e-5))
+    return ex, m
+
+
+# ---------------------------------------------------------------------------
+# series mechanics
+# ---------------------------------------------------------------------------
+
+def test_counter_is_monotone_and_rejects_negative_inc():
+    tel = Telemetry()
+    c = tel.counter("x_total_ops", device=0)
+    c.inc(0.0, 2.0)
+    c.inc(1.0, 3.0)
+    assert c.value == 5.0
+    assert [v for _, v in c.points] == [2.0, 5.0]
+    with pytest.raises(ValueError):
+        c.inc(2.0, -1.0)
+    assert c.value == 5.0              # failed inc must not mutate
+
+
+def test_gauge_step_interpolation_and_rate():
+    tel = Telemetry()
+    g = tel.gauge("x_depth")
+    g.set(1.0, 4.0)
+    g.set(3.0, 2.0)
+    assert g.value_at(0.5) == 0.0      # before first point
+    assert g.value_at(1.0) == 4.0
+    assert g.value_at(2.9) == 4.0      # holds between points
+    assert g.value_at(99.0) == 2.0
+    c = tel.counter("x_ops")
+    c.inc(0.0, 10.0)
+    c.inc(2.0, 30.0)
+    assert c.rate() == pytest.approx(15.0)
+    assert c.rate(0.0, 1.0) == pytest.approx(0.0)   # step: all at t=2
+    assert c.rate(5.0, 5.0) == 0.0
+
+
+def test_ring_buffer_bounds_points_but_keeps_totals():
+    tel = Telemetry(max_points=16)
+    c = tel.counter("x")
+    for i in range(100):
+        c.inc(float(i))
+    assert len(c.points) == 16
+    assert c.value == 100.0            # total survives ring eviction
+    assert c.points[0][0] == 84.0      # oldest retained
+
+
+def test_resolution_coalesces_close_updates():
+    tel = Telemetry(resolution=1.0)
+    g = tel.gauge("x")
+    g.set(0.0, 1.0)
+    g.set(0.5, 2.0)                    # < resolution: merges into last
+    g.set(2.0, 3.0)
+    assert len(g.points) == 2
+    assert g.points[0] == (0.5, 2.0)   # newest value wins the cell
+
+
+def test_series_memoized_and_kind_mismatch_raises():
+    tel = Telemetry()
+    a = tel.counter("x", bank=1, channel=0)
+    b = tel.counter("x", channel=0, bank=1)   # label order irrelevant
+    assert a is b
+    with pytest.raises(ValueError):
+        tel.gauge("x", bank=1, channel=0)
+    with pytest.raises(ValueError):
+        Telemetry(clock="lamport")
+
+
+def test_histogram_exposition_shape():
+    tel = Telemetry()
+    h = tel.histogram("x_seconds", buckets=(0.1, 1.0))
+    for t, v in enumerate((0.05, 0.5, 0.5, 5.0)):
+        h.observe(float(t), v)
+    assert h.count == 4 and h.sum == pytest.approx(6.05)
+    assert h.mean == pytest.approx(6.05 / 4)
+    cum = h.cumulative_buckets()
+    assert cum == [(0.1, 1), (1.0, 3), (float("inf"), 4)]
+    with pytest.raises(ValueError):
+        tel.histogram("y_seconds", buckets=(1.0, 0.1))
+
+
+# ---------------------------------------------------------------------------
+# invisible when detached / armed on every backend path
+# ---------------------------------------------------------------------------
+
+def test_detached_metrics_match_pre_observability_golden(detached):
+    got = json.loads(json.dumps(detached[1].summary(), sort_keys=True))
+    want = json.load(open(GOLDEN))
+    assert got == want, (
+        "no-telemetry serving metrics diverged from the golden — "
+        "telemetry is no longer zero-overhead-when-disabled")
+
+
+def test_telemetry_leaves_analytic_metrics_bit_identical(detached, armed):
+    assert armed[1].summary() == detached[1].summary()
+
+
+def test_telemetry_leaves_pim_metrics_bit_identical(armed_pim):
+    _, m_off = S.run_scenario("pim")
+    assert armed_pim[1].summary() == m_off.summary()
+
+
+def test_telemetry_leaves_fleet_metrics_bit_identical():
+    def run(armed: bool):
+        fleet = FleetScheduler(
+            S.PARAMS, S.MEM, n_devices=2, backend="analytic",
+            policy=BatchPolicy(slots_per_ct=S.PARAMS.slots, max_batch=4,
+                               max_wait_s=2e-3),
+            cache_bytes=64 * 2 ** 20,
+            pass_config=PassConfig(start_level=S.START),
+            continuous_batching=True)
+        S.register_workloads(fleet)
+        fleet.warmup()
+        if armed:
+            fleet.metrics.telemetry = Telemetry(clock="virtual")
+        return fleet, fleet.serve(S.make_arrivals(fleet))
+    _, m_off = run(False)
+    fleet, m_on = run(True)
+    assert m_on.summary() == m_off.summary()
+    tel = fleet.metrics.telemetry
+    # both devices emitted health series into the shared registry
+    devs = {dict(s.labels)["device"]
+            for s in tel.find("fhe_device_queue_depth")}
+    assert devs == {"0", "1"}
+    occ = tel.find("fhe_device_inflight_occupancy")
+    assert occ and all(0.0 <= v <= 1.0
+                       for s in occ for _, v in s.points)
+    assert all(s.value == 0.0 for s in occ)   # drained at end of serve
+
+
+def test_telemetry_not_in_metrics_summary(armed):
+    flat = json.dumps(armed[1].summary(), default=str)
+    assert "Telemetry" not in flat and "telemetry" not in flat
+
+
+# ---------------------------------------------------------------------------
+# clock domains
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock_series_live_on_des_timeline(armed, armed_pim):
+    for ex, m in (armed, armed_pim):
+        tel = ex.metrics.telemetry
+        assert tel.clock == "virtual"
+        assert len(tel) > 0
+        for s in tel.series():
+            assert s.clock == "virtual"
+            for t, _ in s.points:
+                assert 0.0 <= t <= m.elapsed_s + 1e-9, (
+                    f"{s.name}: point at t={t} outside the DES window "
+                    f"[0, {m.elapsed_s}] — a wall clock leaked in")
+
+
+def test_ciphertext_stage_series_carry_measured_wall_seconds():
+    import numpy as np
+    from repro.core.params import test_params
+    from repro.core.pipeline import MemoryModel
+    from repro.runtime import (CiphertextBackend, KeyCache,
+                               PipelinedExecutor, Request)
+    from repro.runtime.workloads import LOLA_CONSTS, lola_infer
+    params = test_params(log_n=8, n_levels=8, dnum=2, log_scale=26)
+    ex = PipelinedExecutor(
+        params, MemoryModel(n_partitions=4,
+                            partition_bytes=256 * 2 ** 10),
+        backend=CiphertextBackend(params, use_kernels=False),
+        policy=BatchPolicy(slots_per_ct=params.slots, max_batch=2,
+                           max_wait_s=1e-3),
+        key_cache=KeyCache(64 * 2 ** 20),
+        pass_config=PassConfig(start_level=7, bsgs_min_terms=4))
+    ex.register("lola", lola_infer, 1, const_names=LOLA_CONSTS,
+                start_level=7)
+    ex.warmup()
+    tel = ex.metrics.telemetry = Telemetry(clock="wall")
+    rng = np.random.default_rng(3)
+    m = ex.serve([Request(ex.queue.next_request_id(), f"t{i % 2}",
+                          "lola", arrival_s=i * 1e-4, slots_needed=8,
+                          payload=rng.uniform(-0.8, 0.8, size=8))
+                  for i in range(4)])
+    hists = tel.find("fhe_stage_wall_seconds")
+    assert hists, "ciphertext serve emitted no stage wall histograms"
+    # measured wall seconds: strictly positive sums, count = stages
+    # observed, and the series declares the wall domain through export
+    assert all(h.clock == "wall" and h.sum > 0.0 and h.count > 0
+               for h in hists)
+    assert sum(s.value for s in
+               tel.find("fhe_partition_busy_seconds")) > 0.0
+    text = render_openmetrics(tel, m)
+    assert "# CLOCK fhe_stage_wall_seconds wall" in text
+
+
+# ---------------------------------------------------------------------------
+# cross-check: telemetry vs the occupancy accumulator (roofline-style
+# busy/wall normalization, the same convention report.py renders)
+# ---------------------------------------------------------------------------
+
+def test_pim_bank_busy_matches_occupancy_accumulator(armed_pim):
+    ex, m = armed_pim
+    tel = ex.metrics.telemetry
+    tel_busy = sum(s.value for s in tel.find("fhe_pim_bank_busy_seconds"))
+    occ_busy = sum(m.occupancy.busy_s)
+    assert tel_busy == pytest.approx(occ_busy, rel=1e-12), (
+        "telemetry bank-busy series and the occupancy accumulator "
+        "disagree — one of the two accounting paths drifted")
+    # utilization fraction derived from telemetry equals the busy/wall
+    # normalization of PartitionOccupancy (format_table's source)
+    mean_u, max_u, n_active = m.occupancy.active_utilization(m.elapsed_s)
+    assert tel_busy / m.elapsed_s == pytest.approx(
+        sum(u for u in m.occupancy.utilization(m.elapsed_s)), rel=1e-12)
+    assert 0.0 < mean_u <= max_u
+    table = m.format_table()
+    assert "partition util" in table
+    assert f"{n_active}/{m.occupancy.n_partitions} active" in table
+
+
+def test_pim_utilization_samples_below_one_with_known_phases(armed_pim):
+    tel = armed_pim[0].metrics.telemetry
+    series = tel.find("fhe_pim_bank_utilization")
+    assert series
+    for s in series:
+        assert dict(s.labels)["phase"] in ("ntt", "modmul", "move",
+                                           "load")
+        for _, v in s.points:
+            assert 0.0 < v < 1.0
+
+
+def test_request_counters_reconcile_with_registry(armed):
+    ex, m = armed
+    tel = ex.metrics.telemetry
+    finished = sum(s.value for s in tel.find("fhe_requests_finished"))
+    assert finished == m.count("requests_served")
+    goodput = tel.get("fhe_goodput_requests")
+    if goodput is not None:
+        assert goodput.value == m.count("requests_goodput")
+    depth = tel.get("fhe_device_queue_depth", device="0")
+    assert depth is not None
+    assert all(v >= 0 and v == int(v) for _, v in depth.points)
+    assert depth.value == 0.0          # queue drained by end of serve
+
+
+# ---------------------------------------------------------------------------
+# SLO burn-rate monitor
+# ---------------------------------------------------------------------------
+
+def test_slo_fires_on_overload_with_span_and_log_marks(overload):
+    ex, m = overload
+    slo = ex.metrics.slo
+    assert m.count("deadline_misses") + \
+        m.count("deadline_misses_dequeue") > 0
+    assert slo.alerts, "sustained overload did not fire the monitor"
+    marks = ex.metrics.tracer.store.by_name("slo_alert")
+    assert len(marks) == len(slo.alerts)
+    assert all(mk.track == "runtime" and
+               mk.attrs["fast_burn"] >= slo.fast_burn for mk in marks)
+    lines = [json.loads(ln) for ln in
+             ex.metrics.event_log.stream.getvalue().splitlines()]
+    assert sum(ln["event"] == "slo_alert" for ln in lines) \
+        == len(slo.alerts)
+    burn = ex.metrics.telemetry.get("fhe_slo_burn_rate", window="fast")
+    assert burn is not None and max(v for _, v in burn.points) \
+        >= slo.fast_burn
+
+
+def test_slo_silent_at_nominal_load():
+    ex = S.build_executor("analytic")
+    ex.metrics.tracer = Tracer()
+    ex.metrics.telemetry = Telemetry(clock="virtual")
+    ex.metrics.slo = SloBurnRate()
+    ex.warmup()
+    m = ex.serve(S.make_arrivals(ex))       # generous 50ms deadlines
+    assert m.count("deadline_misses") == 0
+    assert not ex.metrics.slo.alerts
+    assert not ex.metrics.tracer.store.by_name("slo_alert")
+
+
+def test_slo_hysteresis_fires_once_then_rearms_after_recovery():
+    slo = SloBurnRate(budget=0.1, fast_window_s=1.0, slow_window_s=10.0,
+                      min_events=4)
+    t = 0.0
+    for _ in range(20):                     # miss storm: one alert
+        t += 0.1
+        slo.record(t, True)
+    assert len(slo.alerts) == 1 and slo.firing
+    for _ in range(200):                    # healthy traffic: recovery
+        t += 0.1
+        slo.record(t, False)
+    assert len(slo.recoveries) == 1 and not slo.firing
+    for _ in range(60):                     # second storm: re-armed
+        t += 0.1
+        slo.record(t, True)
+    assert len(slo.alerts) == 2
+
+
+def test_slo_parameter_validation():
+    with pytest.raises(ValueError):
+        SloBurnRate(budget=0.0)
+    with pytest.raises(ValueError):
+        SloBurnRate(fast_window_s=1.0, slow_window_s=1.0)
+
+
+# ---------------------------------------------------------------------------
+# TelemetryHub: fleet-wide aggregation
+# ---------------------------------------------------------------------------
+
+def test_hub_aggregates_across_label_sets():
+    tel = Telemetry()
+    tel.gauge("depth", device=0).set(1.0, 4.0)
+    tel.gauge("depth", device=1).set(2.0, 6.0)
+    tel.gauge("depth", device=0).set(3.0, 0.0)
+    hub = TelemetryHub(tel)
+    assert hub.aggregate("depth", "sum") == [(1.0, 4.0), (2.0, 10.0),
+                                             (3.0, 6.0)]
+    assert hub.aggregate("depth", "max")[1] == (2.0, 6.0)
+    assert hub.aggregate("depth", "mean")[2] == (3.0, 3.0)
+    assert hub.aggregate("depth", "sum", label="device",
+                         value=1) == [(2.0, 6.0)]
+    with pytest.raises(ValueError):
+        hub.aggregate("depth", "median")
+
+
+def test_hub_counters_contribute_zero_before_first_point():
+    tel = Telemetry()
+    tel.counter("ops", device=0).inc(1.0, 5.0)
+    tel.counter("ops", device=1).inc(3.0, 7.0)
+    hub = TelemetryHub(tel)
+    # at t=1 device 1 hasn't emitted: counts as 0 in the fleet sum
+    assert hub.aggregate("ops", "sum") == [(1.0, 5.0), (3.0, 12.0)]
+    assert hub.totals("ops") == {"device=0": 5.0, "device=1": 7.0}
+    assert set(hub.group("ops")) == {"0", "1"}
+    assert hub.aggregate("missing") == []
+
+
+def test_hub_fleet_queue_depth_view(armed):
+    hub = TelemetryHub(armed[0].metrics.telemetry)
+    agg = hub.aggregate("fhe_device_queue_depth", "max")
+    assert agg and max(v for _, v in agg) >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# OpenMetrics export
+# ---------------------------------------------------------------------------
+
+def test_openmetrics_roundtrip_from_serve(armed_pim, tmp_path):
+    ex, m = armed_pim
+    path = str(tmp_path / "metrics.txt")
+    text = write_metrics(path, ex.metrics.telemetry, m)
+    assert open(path).read() == text
+    samples, errors = parse_openmetrics(text)
+    assert errors == []
+    assert samples
+    names = {s.name for s in samples}
+    assert "fhe_pim_bank_busy_seconds_total" in names
+    assert "fhe_pim_bank_utilization" in names
+    assert "fhe_runtime_events_total" in names
+    assert text.rstrip().endswith("# EOF")
+    assert openmetrics.main(["validate", path]) == 0
+
+
+def test_openmetrics_validator_rejects_malformed_text():
+    def errs(text):
+        return parse_openmetrics(text)[1]
+    assert errs("# TYPE x counter\nx_total 1\n")        # no EOF
+    assert errs("x_total 1\n# EOF\n")                   # sample before TYPE
+    assert errs("# TYPE x counter\nx 1\n# EOF\n")       # missing _total
+    assert errs("# TYPE x gauge\nx_total 1\n# EOF\n")   # gauge w/ suffix
+    assert errs("# TYPE x gauge\nx 1\nx 2\n# EOF\n")    # duplicate
+    assert errs('# TYPE x histogram\n'
+                'x_bucket{le="0.1"} 5\nx_bucket{le="1.0"} 3\n'
+                'x_bucket{le="+Inf"} 5\nx_sum 1\nx_count 5\n'
+                '# EOF\n')                              # non-monotone
+    assert errs("# TYPE x counter\nx_total 1\n# EOF\nx_total 2\n")
+    assert parse_openmetrics("# EOF\n")[1] == []        # empty is valid
+
+
+def test_openmetrics_cli_flags_invalid_file(tmp_path):
+    bad = tmp_path / "bad.txt"
+    bad.write_text("# TYPE x counter\nx 1\n# EOF\n")
+    assert openmetrics.main(["validate", str(bad)]) == 1
+    assert openmetrics.main(["bogus"]) == 2
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.obs.openmetrics", "validate",
+         str(bad)],
+        env=dict(os.environ, PYTHONPATH="src"),
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+
+
+# ---------------------------------------------------------------------------
+# Perfetto counter tracks
+# ---------------------------------------------------------------------------
+
+def test_perfetto_merges_validating_counter_tracks(armed, tmp_path):
+    ex, _ = armed
+    store = ex.metrics.tracer.store
+    tel = ex.metrics.telemetry
+    obj = to_trace_events(store, clock="virtual", telemetry=tel)
+    assert validate(obj) == []
+    counters = [e for e in obj["traceEvents"] if e.get("ph") == "C"]
+    assert len(counters) == tel.n_points()
+    assert {e["pid"] for e in counters} == {4}
+    for e in counters:
+        assert isinstance(e["ts"], (int, float))
+        assert set(e["args"]) == {"value"}
+        assert isinstance(e["args"]["value"], (int, float))
+    # one named thread per series, under a named telemetry process
+    meta = [e for e in obj["traceEvents"] if e.get("ph") == "M"
+            and e.get("pid") == 4]
+    threads = {e["args"]["name"] for e in meta
+               if e["name"] == "thread_name"}
+    assert len(threads) == len(tel)
+    assert any(e["name"] == "process_name"
+               and e["args"]["name"] == "telemetry" for e in meta)
+    assert obj["otherData"]["n_series"] == len(tel)
+    # without telemetry the export is unchanged legacy shape
+    legacy = to_trace_events(store, clock="virtual")
+    assert not [e for e in legacy["traceEvents"] if e.get("ph") == "C"]
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/compare.py: the local perf gate
+# ---------------------------------------------------------------------------
+
+def _write_results(dirpath, goodput):
+    os.makedirs(dirpath, exist_ok=True)
+    recs = [{"figure": "utilization", "workload": "helr",
+             "preset": "fhemem", "goodput_rps": goodput,
+             "mean_util": 0.6},
+            {"figure": "overhead", "overhead_frac": 0.01}]
+    with open(os.path.join(dirpath, "fig22_utilization.jsonl"),
+              "w") as f:
+        for r in recs:
+            f.write(json.dumps(r) + "\n")
+
+
+def test_compare_exits_nonzero_on_regression(tmp_path, capsys):
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    _write_results(a, goodput=1000.0)
+    _write_results(b, goodput=900.0)       # -10% > 2% budget
+    assert bench_compare.main([a, b]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out and "goodput_rps" in out
+    assert bench_compare.main([a, a]) == 0
+    # a wide threshold scale waives the same delta
+    assert bench_compare.main([a, b, "--threshold-scale", "10"]) == 0
+    assert bench_compare.main([a, str(tmp_path / "missing")]) == 2
+
+
+def test_compare_skips_one_sided_records(tmp_path, capsys):
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    _write_results(a, goodput=1000.0)
+    os.makedirs(b, exist_ok=True)
+    with open(os.path.join(b, "fig22_utilization.jsonl"), "w") as f:
+        f.write(json.dumps({"figure": "utilization", "workload": "lola",
+                            "preset": "flat", "goodput_rps": 5.0,
+                            "mean_util": 0.1}) + "\n")
+    assert bench_compare.main([a, b]) == 0   # drift, not regression
+    assert "skipped" in capsys.readouterr().out
